@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: wall-clock timing of jitted callables."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "Row", "fmt_rows"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 20,
+            min_time_s: float = 0.2) -> float:
+    """Median-of-batches microseconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    # calibrate batch count
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    once = max(time.perf_counter() - t0, 1e-7)
+    n = max(1, min(iters, int(min_time_s / once)))
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / n)
+    return min(times) * 1e6
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str = ""):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.2f},{self.derived}"
+
+
+def fmt_rows(rows) -> str:
+    return "\n".join(r.csv() for r in rows)

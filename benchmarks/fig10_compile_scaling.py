@@ -1,0 +1,31 @@
+"""Paper Fig 10: compile time grows linearly with generated code size —
+here, the fast-path table baked into the specialized lookup (the LibLPM-NI
+analog: one constant row per LPM entry).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.fastpath import FastPathTable, make_fastpath
+
+
+def run() -> list[Row]:
+    rows = []
+    rs = np.random.RandomState(0)
+    q = jax.ShapeDtypeStruct((64, 1), jnp.int64)
+    for n in (16, 64, 256, 1024, 4096):
+        keys = rs.randint(0, 1 << 20, (n, 1)).astype(np.int64)
+        vals = rs.randint(0, 255, (n, 1)).astype(np.int64)
+        fp = make_fastpath(lambda x: x * 2,
+                           FastPathTable.from_arrays(keys, vals),
+                           key_dtype=jnp.int64, value_dtype=jnp.int64)
+        t0 = time.perf_counter()
+        jax.jit(fp).lower(q).compile()
+        ms = (time.perf_counter() - t0) * 1e3
+        rows.append(Row(f"fig10/N{n}", ms * 1e3, f"{ms:.0f}ms"))
+    return rows

@@ -1,0 +1,87 @@
+"""Paper Fig 11 + §6.4 cost table: instrumentation overhead vs sampling
+rate, in-graph tap cost, and specialization-guard hit/miss costs.
+
+SimpleBench analog: two trivial jitted functions f (square) and g
+(product), the cheapest possible handlers, so overheads dominate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core import IridescentRuntime, guards
+from repro.core.instrumentation import hist_tap
+
+
+def run() -> list[Row]:
+    rows = []
+
+    # --- host-side instrumentation at varying sampling rates (general pt)
+    def fb(spec):
+        return lambda x: x * x
+
+    x = jnp.float32(3.0)
+    for rate in (0.0, 0.01, 0.1, 1.0):
+        rt = IridescentRuntime(async_compile=False)
+        h = rt.register("f", fb)
+        h(x)
+        if rate > 0:
+            h.enable_instrumentation(rate=rate, collectors={
+                "a": lambda a, k: float(a[0])})
+        us = time_fn(h, x, iters=200)
+        rows.append(Row(f"fig11/host_instr_rate{rate}", us))
+        rt.shutdown()
+
+    # --- in-graph tap (range point analog: ~free, fused)
+    def gb_plain(spec):
+        return lambda a, b: a * b
+
+    def gb_tap(spec):
+        instr = spec.tap("b_hist")
+
+        def g(a, b):
+            out = a * b
+            if instr:
+                return out, {"b_hist": hist_tap(b[None], 16, 0.0, 16.0)}
+            return out
+
+        return g
+
+    rt = IridescentRuntime(async_compile=False)
+    h0 = rt.register("g0", gb_plain)
+    h1 = rt.register("g1", gb_tap)
+    a, b = jnp.float32(2.0), jnp.float32(3.0)
+    h0(a, b)
+    h1.enable_instrumentation(rate=0.0)   # in-graph tap only
+    h1(a, b)
+    us0 = time_fn(h0, a, b, iters=200)
+    us1 = time_fn(h1, a, b, iters=200)
+    rows.append(Row("fig11/tap_baseline", us0))
+    rows.append(Row("fig11/tap_enabled", us1,
+                    f"overhead={us1 - us0:.2f}us"))
+    rt.shutdown()
+
+    # --- guard hit vs miss cost (§6.4 "Specialization Guards and Failures")
+    def fb_guarded(spec):
+        v = spec.generic("a", None, guard=guards.arg_equals(0))
+        return lambda q: q * q
+
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("f", fb_guarded)
+    h(x)
+    us_plain = time_fn(h, x, iters=200)
+    h.specialize({"a": x}, wait=True)
+    us_hit = time_fn(h, x, iters=200)          # guard passes
+    miss = jnp.float32(4.0)
+    h(miss)
+    us_miss = time_fn(h, miss, iters=200)      # guard fails -> generic
+    rows.append(Row("fig11/guard_disabled", us_plain))
+    rows.append(Row("fig11/guard_hit", us_hit,
+                    f"+{us_hit - us_plain:.2f}us"))
+    rows.append(Row("fig11/guard_miss", us_miss,
+                    f"+{us_miss - us_plain:.2f}us (fallback dispatch, "
+                    f"no 5000-cycle unwind)"))
+    rt.shutdown()
+    return rows

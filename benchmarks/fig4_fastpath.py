@@ -1,0 +1,91 @@
+"""Paper Fig 3/4/5: fast-path (hot-key) specialization for an LPM-style
+lookup — throughput vs table size (Fig 4) and vs hit rate (Fig 5).
+
+Generic handler: vectorized longest-prefix match over an M-entry table
+(cost grows with M, like LinearIPLookup's linear scan).  Specialized: top-N
+hot addresses matched against a baked constant table, batch-level guard
+skips the scan entirely when every element hits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core.fastpath import FastPathTable, make_fastpath
+
+BATCH = 64
+
+
+def make_lpm(m: int, rs: np.random.RandomState):
+    """Random LPM table: (net, masklen, next_hop)."""
+    masklen = rs.randint(8, 25, size=m).astype(np.int32)
+    nets = (rs.randint(0, 2**31 - 1, size=m).astype(np.int64)
+            & (~((1 << (32 - masklen)) - 1))).astype(np.int64)
+    hops = rs.randint(1, 255, size=m).astype(np.int64)
+    nets_c = jnp.asarray(nets)
+    mask_c = jnp.asarray(masklen)
+    hops_c = jnp.asarray(hops)
+
+    @jax.jit
+    def lookup(addrs):            # (B, 1) int64 -> (B, 1) int64
+        a = addrs.reshape(-1)
+        shift = (32 - mask_c).astype(jnp.int64)
+        match = (a[:, None] >> shift[None, :]) == \
+            (nets_c[None, :] >> shift[None, :])          # (B, M)
+        pref = jnp.where(match, mask_c[None, :], -1)
+        best = jnp.argmax(pref, axis=-1)
+        hit = jnp.max(pref, axis=-1) >= 0
+        hop = jnp.where(hit, hops_c[best], 0)
+        return hop[:, None]
+
+    return lookup, nets, masklen
+
+
+def run() -> list[Row]:
+    rows = []
+    rs = np.random.RandomState(0)
+
+    # Fig 4: throughput vs table size, 100% fast-path hit rate.
+    for m in (16, 128, 1024, 8192):
+        lookup, nets, masklen = make_lpm(m, rs)
+        hot = nets[:16] | 1                       # 16 hot addresses
+        hot_keys = hot.reshape(-1, 1)
+        hot_vals = np.asarray(lookup(jnp.asarray(hot_keys)))
+        fp = jax.jit(make_fastpath(lookup, FastPathTable.from_arrays(
+            hot_keys, hot_vals), key_dtype=jnp.int64,
+            value_dtype=jnp.int64))
+        batch = jnp.asarray(rs.choice(hot, BATCH).reshape(-1, 1))
+        np.testing.assert_array_equal(fp(batch), lookup(batch))
+        us_g = time_fn(lookup, batch)
+        us_f = time_fn(fp, batch)
+        rows.append(Row(f"fig4/M{m}/generic", us_g))
+        rows.append(Row(f"fig4/M{m}/fastpath", us_f,
+                        f"speedup={us_g / us_f:.1f}x"))
+
+    # Fig 5: throughput vs hit rate (M=1024).
+    lookup, nets, masklen = make_lpm(1024, rs)
+    hot = nets[:16] | 1
+    hot_keys = hot.reshape(-1, 1)
+    hot_vals = np.asarray(lookup(jnp.asarray(hot_keys)))
+    fp = jax.jit(make_fastpath(lookup, FastPathTable.from_arrays(
+        hot_keys, hot_vals), key_dtype=jnp.int64, value_dtype=jnp.int64))
+    cold = jnp.asarray(rs.randint(0, 2**31 - 1, (BATCH, 1)).astype(np.int64))
+    hot_b = jnp.asarray(rs.choice(hot, BATCH).reshape(-1, 1))
+    us_gen = time_fn(lookup, hot_b)
+    for hit_pct in (0, 50, 90, 100):
+        # request stream: whole batches are hot with prob hit_pct (batch-
+        # level guard; the TPU-native granularity, see DESIGN.md)
+        def mixed(hot_b=hot_b, cold=cold, p=hit_pct / 100.0):
+            n_hot = int(round(p * 10))
+            outs = []
+            for i in range(10):
+                outs.append(fp(hot_b if i < n_hot else cold))
+            return outs[-1]
+        us = time_fn(mixed) / 10.0
+        rows.append(Row(f"fig5/hit{hit_pct}", us,
+                        f"speedup={us_gen / us:.1f}x"))
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Fig 6 (TAS rx_batch exploration): online exploration of a serving
+batch-split spec point, driven by the library Explorer against measured
+end-to-end throughput.  Emits the exploration timeline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core import ExhaustiveSweep, Explorer, IridescentRuntime
+
+
+def _builder(spec):
+    """A request-processing handler: the microbatch split is the analog of
+    TAS's BATCH_SIZE (3 separate points in the paper; one here + two fixed
+    splits to keep the CPU run short)."""
+    split = spec.enum("rx_batch", 1, (1, 4, 16))
+
+    def handler(reqs):            # (64, 128) f32
+        out = []
+        for chunk in jnp.split(reqs, split):
+            h = jnp.tanh(chunk @ chunk.T)
+            out.append(h.sum())
+        return jnp.stack(out).sum()
+
+    return handler
+
+
+def run() -> list[Row]:
+    rows = []
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("serve", _builder)
+    reqs = jnp.asarray(np.random.RandomState(0).randn(64, 128)
+                       .astype(np.float32))
+    h(reqs)
+
+    ex = Explorer(h, ExhaustiveSweep.from_space(h.spec_space(),
+                                                ["rx_batch"]), dwell=30)
+    for i in range(150):
+        h(reqs)
+        ex.step()
+    # timeline rows: per explored config, the measured throughput
+    for phase, cfg, metric in ex.history:
+        rows.append(Row(f"fig6/{phase.value}/rx_batch="
+                        f"{cfg.get('rx_batch') if cfg else None}",
+                        1e6 / max(metric, 1e-9), f"tput={metric:.1f}/s"))
+    best = h.active_config()
+    rows.append(Row("fig6/selected", 0.0, f"rx_batch={best.get('rx_batch')}"))
+    rt.shutdown()
+    return rows

@@ -1,0 +1,55 @@
+"""Paper Fig 8 (NAT/Policer batch exploration across two traffic phases):
+per-phase optimal configuration re-found after each phase change.
+
+The serving analog: request sequence-length distribution switches phases;
+the optimal padding bucket (a workload-assumption spec point with a guard)
+differs per phase.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
+                        IridescentRuntime, guards)
+
+
+def _builder(spec):
+    bucket = spec.enum("bucket", 256, (32, 256),
+                       guard=lambda a, k, v: a[0].shape[1] <= v)
+
+    def handler(reqs):
+        b, s = reqs.shape
+        pad = bucket - s if s < bucket else 0
+        x = jnp.pad(reqs, ((0, 0), (0, pad)))
+        return jnp.tanh(x @ x.T).sum()
+
+    return handler
+
+
+def run() -> list[Row]:
+    rows = []
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("nf", _builder)
+    rs = np.random.RandomState(0)
+    short = jnp.asarray(rs.randn(16, 32).astype(np.float32))
+    long_ = jnp.asarray(rs.randn(16, 256).astype(np.float32))
+    h(short)
+
+    ex = Explorer(h, ExhaustiveSweep.from_space(h.spec_space(), ["bucket"]),
+                  dwell=40, change_detector=ChangeDetector(0.4, warmup=0))
+    picks = {}
+    for i in range(600):
+        req = short if i < 300 else long_     # phase switch at midpoint
+        h(req)
+        ex.step()
+        if i in (299, 599):
+            picks[0 if i == 299 else 1] = h.active_config().get("bucket")
+    rows.append(Row("fig8/phase0_pick", 0.0, f"bucket={picks.get(0)}"))
+    rows.append(Row("fig8/phase1_pick", 0.0, f"bucket={picks.get(1)}"))
+    rows.append(Row("fig8/guard_misses", float(h.guard_misses),
+                    "misses fell back to generic"))
+    rt.shutdown()
+    return rows

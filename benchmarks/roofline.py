@@ -1,0 +1,66 @@
+"""Roofline table renderer: reads artifacts/dryrun/*.json (produced by
+launch/dryrun.py) and prints the §Roofline table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load(mesh: str = "single", tag: str | None = None) -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        base = os.path.basename(fn)[:-len(".json")]
+        parts = base.split("__")
+        cell_tag = parts[2] if len(parts) > 2 else None
+        if cell_tag != tag:
+            continue
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def render_markdown(mesh: str = "single", tag: str | None = None) -> str:
+    rows = load(mesh, tag)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs/chip | useful ratio | args GiB/dev | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        rf = r["roofline"]
+        mem = r["full"]["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} | "
+            f"{rf['memory_s']:.4g} | {rf['collective_s']:.4g} | "
+            f"{rf['dominant']} | {rf['model_flops_per_chip']:.3g} | "
+            f"{rf['useful_flops_ratio']:.3f} | "
+            f"{mem.get('argument_size_in_bytes', 0) / 2**30:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0) / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[Row]:
+    rows = []
+    for r in load("single"):
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}", dom_s * 1e6,
+            f"dominant={rf['dominant']};useful={rf['useful_flops_ratio']:.3f}"))
+    if not rows:
+        rows.append(Row("roofline/missing", 0.0,
+                        "run: python -m repro.launch.dryrun"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    tag = sys.argv[2] if len(sys.argv) > 2 else None
+    print(render_markdown(mesh, tag))

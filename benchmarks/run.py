@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §Per-experiment
+index for the mapping to the paper's tables/figures).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig4_fastpath, fig6_batch_explore,
+                        fig7_workload_adapt, fig8_phase_adapt,
+                        fig9_fastpath_size, fig10_compile_scaling,
+                        fig11_overheads, roofline, table1_blocksize,
+                        table3_const_vs_var, table4_compile_time)
+
+MODULES = [
+    ("table1", table1_blocksize),
+    ("table3", table3_const_vs_var),
+    ("fig4_5", fig4_fastpath),
+    ("fig6", fig6_batch_explore),
+    ("fig7", fig7_workload_adapt),
+    ("fig8", fig8_phase_adapt),
+    ("fig9", fig9_fastpath_size),
+    ("table4", table4_compile_time),
+    ("fig10", fig10_compile_scaling),
+    ("fig11", fig11_overheads),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # keep the harness running
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0,{type(e).__name__}", flush=True)
+        print(f"{name}/_wall,{(time.perf_counter() - t0) * 1e6:.0f},",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 1: optimal block size depends on (workload, hardware).
+
+CPU analog of MMulBlockBench: a blocked matmul whose block size ``B`` is a
+baked compile-time constant (the einsum block decomposition), swept over
+matrix sizes N.  The optimal B per N on this host is the Table 1 row for
+"this machine"; on TPU the same spec point is the Pallas BlockSpec tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+
+NS = (64, 256, 1024)
+BS = (4, 8, 16, 32, 64)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def blocked_matmul(x, y, b: int):
+    n = x.shape[0]
+    nb = n // b
+    xb = x.reshape(nb, b, nb, b).transpose(0, 2, 1, 3)   # (i, k, b, b)
+    yb = y.reshape(nb, b, nb, b).transpose(0, 2, 1, 3)   # (k, j, b, b)
+    out = jnp.einsum("ikab,kjbc->ijac", xb, yb)
+    return out.transpose(0, 2, 1, 3).reshape(n, n)
+
+
+def run() -> list[Row]:
+    rows = []
+    rs = np.random.RandomState(0)
+    for n in NS:
+        x = jnp.asarray(rs.randn(n, n).astype(np.float32))
+        y = jnp.asarray(rs.randn(n, n).astype(np.float32))
+        best_b, best_us = None, float("inf")
+        per_b = {}
+        for b in BS:
+            if b > n:
+                continue
+            us = time_fn(lambda xx, yy: blocked_matmul(xx, yy, b), x, y)
+            per_b[b] = us
+            rows.append(Row(f"table1/N{n}/B{b}", us))
+            if us < best_us:
+                best_b, best_us = b, us
+        rows.append(Row(f"table1/N{n}/optimal", best_us, f"B={best_b}"))
+    return rows

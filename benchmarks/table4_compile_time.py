@@ -1,0 +1,70 @@
+"""Paper Table 4: JIT compilation time per target system (off the critical
+path).  Here: XLA compile latency for each of our handler kinds, measured
+through the runtime's AOT path (what the async compiler pays per variant).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from benchmarks.table1_blocksize import blocked_matmul
+from repro import configs
+from repro.core import IridescentRuntime
+from repro.core.fastpath import FastPathTable, make_fastpath
+from repro.core.specializer import specialize_builder
+from repro.models import transformer as model
+from repro.optim import OptConfig, init_opt_state
+from repro.training import (make_decode_builder, make_train_builder)
+
+
+def _compile_time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    jax.jit(fn).lower(*args).compile()
+    return (time.perf_counter() - t0) * 1e3
+
+
+def run() -> list[Row]:
+    rows = []
+    rs = np.random.RandomState(0)
+
+    # MMulBlockBench
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ms = _compile_time(lambda a, b: blocked_matmul(a, b, 16), x, x)
+    rows.append(Row("table4/mmulblockbench", ms * 1e3, f"{ms:.0f}ms"))
+
+    # fast-path specialized lookup (LibLPM-FP analog)
+    keys = rs.randint(0, 1 << 20, (16, 1)).astype(np.int64)
+    vals = rs.randint(0, 255, (16, 1)).astype(np.int64)
+    fp = make_fastpath(lambda q: q * 2,
+                       FastPathTable.from_arrays(keys, vals),
+                       key_dtype=jnp.int64, value_dtype=jnp.int64)
+    q = jax.ShapeDtypeStruct((64, 1), jnp.int64)
+    ms = _compile_time(fp, q)
+    rows.append(Row("table4/liblpm_fp", ms * 1e3, f"{ms:.0f}ms"))
+
+    # LM train step (reduced qwen3) — the "TAS" scale handler here
+    cfg = configs.get_reduced("qwen3-0.6b")
+    opt_cfg = OptConfig()
+    step = specialize_builder(
+        make_train_builder(cfg, opt_cfg, kernel_impl="xla"), {}).fn
+    params = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    ms = _compile_time(step, {"params": params, "opt": opt}, batch)
+    rows.append(Row("table4/train_step", ms * 1e3, f"{ms:.0f}ms"))
+
+    # decode step (FastClick-scale handler)
+    dstep = specialize_builder(
+        make_decode_builder(cfg, kernel_impl="xla"), {}).fn
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, 4, 64))
+    ms = _compile_time(dstep, params, cache,
+                       jax.ShapeDtypeStruct((4,), jnp.int32),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+    rows.append(Row("table4/serve_step", ms * 1e3, f"{ms:.0f}ms"))
+    return rows

@@ -1,0 +1,54 @@
+"""MoE dispatch exploration: the online policy discovers which dispatch
+implementation (einsum vs gather vs ranking scheme) is fastest for the
+current workload — measured for real on this host.
+
+    PYTHONPATH=src python examples/moe_exploration.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import ExhaustiveSweep, Explorer, IridescentRuntime, cartesian
+from repro.models import transformer as model
+from repro.optim import OptConfig, init_opt_state
+from repro.training import make_train_builder
+
+
+def main():
+    cfg = configs.get_reduced("kimi-k2-1t-a32b").replace(
+        compute_dtype="float32", n_experts=16, top_k=4)
+    opt_cfg = OptConfig(lr=1e-3, total_steps=1000)
+    rt = IridescentRuntime()
+    handler = rt.register(
+        "train_step", make_train_builder(cfg, opt_cfg, kernel_impl="xla"),
+        donate_argnums=0)
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    rs = np.random.RandomState(0)
+    toks = jnp.asarray(rs.randint(0, cfg.vocab_size, (8, 65)))
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    state, _ = handler(state, batch)
+
+    candidates = cartesian(
+        [{"moe_impl": i} for i in ("einsum", "gather")],
+        [{"moe_ranking": r} for r in ("cumsum", "sort")],
+    )
+    explorer = Explorer(handler, ExhaustiveSweep(candidates), dwell=15)
+    print("exploring MoE dispatch implementations...")
+    for i in range(110):
+        state, _ = handler(state, batch)
+        explorer.step()
+    for phase, cfg_, metric in explorer.history:
+        sel = {k: v for k, v in (cfg_ or {}).items()
+               if k in ("moe_impl", "moe_ranking")}
+        print(f"  {phase.value:8s} {sel}  tput={metric:8.1f} steps/s")
+    sel = {k: v for k, v in handler.active_config().items()
+           if k in ("moe_impl", "moe_ranking")}
+    print(f"selected: {sel}")
+    rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving example: batched LM decode with online specialization.
+
+    PYTHONPATH=src python examples/serve_adaptive.py
+    PYTHONPATH=src python examples/serve_adaptive.py --arch rwkv6-1.6b
+
+The handler is the decode step of a reduced assigned architecture; the
+policy explores decode-side spec points (cache dtype; chunk length for the
+recurrent archs) against measured tokens/s.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--steps", "240"]
+    main()

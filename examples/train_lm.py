@@ -1,0 +1,19 @@
+"""End-to-end training example: a small LM trained for a few hundred steps
+on CPU with online specialization and checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py                # quick (2M)
+    PYTHONPATH=src python examples/train_lm.py --size 100m \
+        --steps 300 --seq 256                                 # the full run
+
+Interrupt and re-run with --ckpt to see restart-from-checkpoint resume the
+data stream and optimizer state exactly.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--size", "2m", "--steps", "60", "--explore",
+                     "--ckpt", "/tmp/repro_train_ckpt"]
+    main()

@@ -1,0 +1,52 @@
+"""Best-known specialization configs per (arch, shape) — the persistent
+output of the §Perf hillclimbs (EXPERIMENTS.md).
+
+This is the production pattern for the paper's technique: the online
+explorer *discovers* these; the store warm-starts the next deployment so
+exploration begins from the incumbent instead of the generic config
+(`Explorer` accepts any policy seeded with these as the first candidate).
+
+``python -m repro.launch.dryrun --spec "$(python -c 'from repro.configs.tuned
+import spec_json; print(spec_json("kimi-k2-1t-a32b","train_4k"))')"``
+"""
+from __future__ import annotations
+
+import json
+
+__all__ = ["TUNED", "best_spec", "spec_json"]
+
+# Hillclimb winners (see EXPERIMENTS.md §Perf for the iteration logs).
+TUNED: dict[tuple[str, str], dict] = {
+    ("kimi-k2-1t-a32b", "train_4k"): {
+        "moe_impl": "shard", "remat": "dots", "logits_dtype": "bfloat16"},
+    ("kimi-k2-1t-a32b", "prefill_32k"): {
+        "moe_impl": "shard", "logits_dtype": "bfloat16"},
+    ("kimi-k2-1t-a32b", "decode_32k"): {
+        "sharding_profile": "serve_ep"},
+    ("deepseek-v2-236b", "train_4k"): {
+        "moe_impl": "shard", "remat": "dots", "logits_dtype": "bfloat16"},
+    ("deepseek-v2-236b", "prefill_32k"): {
+        "moe_impl": "shard", "logits_dtype": "bfloat16"},
+    ("deepseek-v2-236b", "decode_32k"): {
+        "sharding_profile": "serve_ep"},
+    ("hymba-1.5b", "train_4k"): {
+        "sharding_profile": "seq", "swa_impl": "banded"},
+    ("hymba-1.5b", "prefill_32k"): {
+        "swa_impl": "banded"},
+    ("hymba-1.5b", "long_500k"): {},
+    ("minitron-4b", "train_4k"): {
+        "sharding_profile": "seq", "loss_chunk": 512},
+    ("musicgen-medium", "train_4k"): {
+        "sharding_profile": "seq", "loss_chunk": 512, "remat": "dots"},
+    ("musicgen-medium", "prefill_32k"): {
+        "sharding_profile": "seq"},
+}
+
+
+def best_spec(arch: str, shape: str) -> dict:
+    """Best-known config, falling back to the generic (empty) config."""
+    return dict(TUNED.get((arch, shape), {}))
+
+
+def spec_json(arch: str, shape: str) -> str:
+    return json.dumps(best_spec(arch, shape))

@@ -1,0 +1,44 @@
+"""Iridescent core: online system implementation specialization for JAX.
+
+The paper's primary contribution — a framework that lets developers declare a
+*space* of possible specializations in performance-critical handler code, then
+explores that space online (JIT-compiling specialized variants off the
+critical path) guided by observed end-to-end system performance.
+
+Public API (mirrors paper Table 2):
+
+Specialization API (used inside handler builders, via :class:`SpecCtx`):
+    ``spec.enum(lbl, x, choices)`` / ``spec.range`` / ``spec.generic`` /
+    ``spec.assume`` / ``spec.custom``
+
+Policy API (used by the system's fixed code):
+    ``IridescentRuntime`` — ``.register``, ``.handler``, ``.spec_space``,
+    ``.specialize``, ``.add_custom_spec``, ``.customize_opts``
+
+Building blocks: policies (``ExhaustiveSweep``, ``CoordinateDescent``,
+``EpsilonGreedy``, ``SuccessiveHalving``, ``Explorer``), metrics
+(``ThroughputCounter``, ``ChangeDetector``), guards, instrumentation, and the
+Morpheus-style fast-path specialization (``fastpath``).
+"""
+from repro.core.points import (DISABLED, AssumePoint, Config, CustomPoint,
+                               EnumPoint, GenericPoint, RangePoint, SpecPoint,
+                               SpecSpace, cartesian, config_key)
+from repro.core.specializer import (SpecCtx, Specialized, discover_space,
+                                    specialize_builder)
+from repro.core.runtime import Handler, IridescentRuntime, Variant
+from repro.core.policy import (CoordinateDescent, EpsilonGreedy,
+                               ExhaustiveSweep, Explorer, Phase, Policy,
+                               SuccessiveHalving)
+from repro.core.metrics import (ChangeDetector, EWMA, StepTimer,
+                                ThroughputCounter)
+from repro.core import fastpath, guards, instrumentation
+
+__all__ = [
+    "DISABLED", "AssumePoint", "Config", "CustomPoint", "EnumPoint",
+    "GenericPoint", "RangePoint", "SpecPoint", "SpecSpace", "cartesian",
+    "config_key", "SpecCtx", "Specialized", "discover_space",
+    "specialize_builder", "Handler", "IridescentRuntime", "Variant",
+    "CoordinateDescent", "EpsilonGreedy", "ExhaustiveSweep", "Explorer",
+    "Phase", "Policy", "SuccessiveHalving", "ChangeDetector", "EWMA",
+    "StepTimer", "ThroughputCounter", "fastpath", "guards", "instrumentation",
+]

@@ -1,0 +1,138 @@
+"""Fast-path specialization (paper §5): the generic re-implementation of
+Morpheus' hot-key specialization.
+
+Two phases, as in the paper:
+
+1. **Instrumentation phase** — sample invocations of the target function to
+   find the most popular inputs along with their computed outputs
+   (``collect`` below, driven by the handler's recorders).
+2. **Specialization phase** — regenerate the target with a fast path mapping
+   the top-N inputs to their outputs, falling through to the generic
+   computation on a miss.
+
+TPU adaptation: the paper emits an if-else chain (one branch per hot key).
+Branch chains serialize on TPU vector units, so we emit a **vectorized
+matcher**: compare the input against a constant ``(N, ...)`` key array baked
+into the program (XLA const-folds it), select the matching value, and use a
+batch-level ``lax.cond`` guard to skip the generic computation entirely when
+the whole batch hits.  Same specialization, hardware-native shape.  A Pallas
+TPU kernel of the matcher lives in ``repro.kernels.fastpath``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import instrumentation as instr
+
+__all__ = ["FastPathTable", "build_table", "make_fastpath",
+           "fastpath_generator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FastPathTable:
+    """Top-N hot inputs and their precomputed outputs."""
+
+    keys: tuple          # hashable nested tuple rep of np.ndarray (N, *key_shape)
+    values: tuple        # same for np.ndarray (N, *val_shape)
+
+    @staticmethod
+    def from_arrays(keys: np.ndarray, values: np.ndarray) -> "FastPathTable":
+        def nest(x):
+            return tuple(nest(v) for v in x) if isinstance(x, list) else x
+
+        k = np.atleast_2d(np.asarray(keys))
+        v = np.asarray(values)
+        v = v.reshape(k.shape[0], -1)          # one value row per key
+        return FastPathTable(keys=nest(k.tolist()), values=nest(v.tolist()))
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    def key_array(self, dtype=None) -> jnp.ndarray:
+        return jnp.asarray(np.array(self.keys), dtype=dtype)
+
+    def value_array(self, dtype=None) -> jnp.ndarray:
+        return jnp.asarray(np.array(self.values), dtype=dtype)
+
+
+def build_table(observed: dict, label: str, n: int,
+                generic_fn: Callable[[np.ndarray], np.ndarray],
+                key_dtype=np.int64) -> FastPathTable | None:
+    """Specialization-phase table construction from instrumentation data.
+
+    ``observed`` is ``handler.spec_space().observed``; the top-N keys are
+    taken from the recorder for ``label`` and their outputs computed once
+    with the generic function.
+    """
+    top = instr.topk_from_counter(observed, label, n)
+    if not top:
+        return None
+    keys = np.array([np.atleast_1d(np.asarray(k, dtype=key_dtype)) for k in top])
+    values = np.stack([np.asarray(generic_fn(jnp.asarray(k))) for k in keys])
+    return FastPathTable.from_arrays(keys, values)
+
+
+def make_fastpath(
+    generic_fn: Callable,
+    table: FastPathTable,
+    *,
+    key_dtype=jnp.int32,
+    value_dtype=None,
+    skip_generic_when_all_hit: bool = True,
+) -> Callable:
+    """Build the specialized function: vectorized top-N matcher + fall-through.
+
+    ``generic_fn(batch_keys) -> batch_values`` is the generic computation
+    (vectorized over the leading batch dim).  The returned function has the
+    same signature and semantics for *all* inputs — hot inputs take the fast
+    path, others fall through (the specialization guard).
+    """
+    keys_c = table.key_array(key_dtype)            # (N, *key_shape) constant
+    vals_c = table.value_array(value_dtype)        # (N, *val_shape) constant
+
+    def specialized(x: jnp.ndarray) -> jnp.ndarray:
+        batchless = x.ndim == keys_c.ndim - 1
+        xb = x[None] if batchless else x           # (B, *key_shape)
+        flat_x = xb.reshape(xb.shape[0], -1).astype(keys_c.dtype)
+        flat_k = keys_c.reshape(keys_c.shape[0], -1)
+        # (B, N) exact-match matrix — the TPU-native "if-else chain".
+        match = jnp.all(flat_x[:, None, :] == flat_k[None, :, :], axis=-1)
+        hit = jnp.any(match, axis=-1)              # (B,)
+        idx = jnp.argmax(match, axis=-1)           # (B,)
+        fast = vals_c[idx]                         # (B, *val_shape)
+
+        def backfill(xb_, fast_, hit_):
+            slow = generic_fn(xb_)
+            hb = hit_.reshape(hit_.shape + (1,) * (slow.ndim - hit_.ndim))
+            return jnp.where(hb, fast_, slow)
+
+        if skip_generic_when_all_hit:
+            out = jax.lax.cond(jnp.all(hit),
+                               lambda xb_, fast_, hit_: fast_,
+                               backfill, xb, fast, hit)
+        else:
+            out = backfill(xb, fast, hit)
+        return out[0] if batchless else out
+
+    return specialized
+
+
+def fastpath_generator(payload: Any, generic_fn: Callable,
+                       **kwargs: Any) -> Callable:
+    """Custom-spec generator (register via ``add_custom_spec("fastpath", ...)``).
+
+    The policy's config value (payload) for the custom point is either a
+    :class:`FastPathTable` or ``(keys, values)`` arrays.
+    """
+    if isinstance(payload, FastPathTable):
+        table = payload
+    else:
+        keys, values = payload
+        table = FastPathTable.from_arrays(np.asarray(keys), np.asarray(values))
+    return make_fastpath(generic_fn, table, **kwargs)

@@ -1,0 +1,94 @@
+"""Specialization guards (paper §4.4.3), adapted to functional JAX.
+
+The paper inserts a check at the specialized function's entry; on failure it
+throws, and the JIT trampoline catches and re-routes to the generic version.
+XLA programs cannot unwind, so guards live at two levels here:
+
+* **Host guards** — predicates over the (host-visible) arguments, evaluated
+  by the trampoline *before* dispatch.  Used for workload-value and shape
+  assumptions (``spec.generic("N", guard=...)``).  Cost: one Python-level
+  predicate per call — the analogue of the paper's ~1-cycle inline check,
+  and the miss path costs one extra dispatch instead of the paper's
+  ~5000-cycle exception unwind (handlers are pure, nothing to roll back).
+* **In-graph guards** — for data-dependent assumptions the host cannot see
+  (e.g. "all keys hit the fast path"), the guard is a ``lax.cond`` selecting
+  the generic computation, plus a miss counter the policy can read.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["arg_equals", "shape_equals", "shape_multiple_of",
+           "cond_guard", "select_guard"]
+
+
+# --- host-side guard predicate factories --------------------------------------
+
+def arg_equals(index: int | str) -> Callable:
+    """Guard: positional/keyword argument equals the specialized value."""
+
+    def g(args: tuple, kwargs: dict, value: Any) -> bool:
+        actual = kwargs[index] if isinstance(index, str) else args[index]
+        return actual == value
+
+    return g
+
+
+def shape_equals(index: int | str, dim: int) -> Callable:
+    """Guard: ``args[index].shape[dim]`` equals the specialized value."""
+
+    def g(args: tuple, kwargs: dict, value: Any) -> bool:
+        actual = kwargs[index] if isinstance(index, str) else args[index]
+        return actual.shape[dim] == value
+
+    return g
+
+
+def shape_multiple_of(index: int | str, dim: int) -> Callable:
+    """Guard for assume-points: ``shape[dim] % value == 0``."""
+
+    def g(args: tuple, kwargs: dict, value: Any) -> bool:
+        actual = kwargs[index] if isinstance(index, str) else args[index]
+        divisor = value if not isinstance(value, bool) else True
+        return actual.shape[dim] % divisor == 0 if not isinstance(value, bool) \
+            else True
+
+    return g
+
+
+# --- in-graph guards ------------------------------------------------------------
+
+def cond_guard(pred: jnp.ndarray,
+               fast_fn: Callable,
+               slow_fn: Callable,
+               *operands: Any) -> tuple[Any, jnp.ndarray]:
+    """Batch-level in-graph guard.
+
+    Runs ``fast_fn`` when the scalar ``pred`` holds, otherwise ``slow_fn``
+    (the generic code).  Returns ``(result, miss)`` where ``miss`` is a
+    0/1 scalar the handler surfaces to the policy — overall metrics then
+    "implicitly factor in any overheads" of guard failures (paper §3).
+    """
+    result = jax.lax.cond(pred, fast_fn, slow_fn, *operands)
+    miss = (~pred).astype(jnp.int32)
+    return result, miss
+
+
+def select_guard(hit: jnp.ndarray,
+                 fast_values: jnp.ndarray,
+                 slow_fn: Callable,
+                 *operands: Any) -> jnp.ndarray:
+    """Element-level in-graph guard: per-element select with generic backfill.
+
+    TPU adaptation of the paper's if-else fast path: instead of branching
+    per element (divergent, serializing), compute the generic result for the
+    whole batch and ``where``-select.  Only profitable when combined with a
+    batch-level :func:`cond_guard` that skips the generic path entirely when
+    every element hit — see ``fastpath.py``.
+    """
+    slow = slow_fn(*operands)
+    hit_b = hit.reshape(hit.shape + (1,) * (fast_values.ndim - hit.ndim))
+    return jnp.where(hit_b, fast_values, slow)

@@ -1,0 +1,144 @@
+"""Instrumentation (paper §4.4.1): collecting runtime values so the policy
+can *discover* specialization candidates.
+
+Two collection modes, mirroring the paper's measured trade-off (§6.4):
+
+* **Host-side sampling** (the paper's "general specialization point",
+  ~450-500 cycles/op at rate=1.0): a Python collector samples the handler's
+  arguments at a configurable sampling rate.  Expensive per sample, so the
+  sampling rate knob matters (Fig 11).
+* **In-graph taps** (the paper's "range-based" point, ~1 cycle/op): the
+  instrumented variant of the handler computes aggregates (histograms,
+  min/max) *inside* the compiled code — nearly free on TPU because it
+  vectorizes — and returns them as extra outputs the runtime accumulates.
+"""
+from __future__ import annotations
+
+import collections
+import random
+import threading
+from typing import Any, Callable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HostRecorder", "TapAccumulator", "RecorderSet",
+           "hist_tap", "topk_from_counter"]
+
+
+class HostRecorder:
+    """Samples ``fn(args, kwargs)`` at ``rate`` and keeps a value Counter."""
+
+    def __init__(self, label: str, fn: Callable[[tuple, dict], Any],
+                 rate: float = 1.0, maxlen: int = 65536,
+                 rng: random.Random | None = None):
+        self.label = label
+        self.fn = fn
+        self.rate = float(rate)
+        self.counter: collections.Counter = collections.Counter()
+        self.samples = 0
+        self.maxlen = maxlen
+        self._rng = rng or random.Random(0xC0FFEE)
+
+    def maybe_record(self, args: tuple, kwargs: dict) -> None:
+        if self._rng.random() >= self.rate:
+            return
+        value = self.fn(args, kwargs)
+        self.samples += 1
+        if len(self.counter) < self.maxlen or value in self.counter:
+            self.counter[value] += 1
+
+    def summary(self) -> dict:
+        return {
+            "kind": "host",
+            "samples": self.samples,
+            "top": self.counter.most_common(32),
+        }
+
+
+class TapAccumulator:
+    """Accumulates in-graph tap outputs (e.g. histograms) across calls."""
+
+    def __init__(self, label: str):
+        self.label = label
+        self.total: np.ndarray | None = None
+        self.calls = 0
+
+    def absorb(self, value: Any) -> None:
+        arr = np.asarray(value)
+        self.total = arr.astype(np.float64) if self.total is None else self.total + arr
+        self.calls += 1
+
+    def summary(self) -> dict:
+        return {"kind": "tap", "calls": self.calls, "total": self.total}
+
+
+class RecorderSet:
+    """Per-handler bundle of host recorders + tap accumulators."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.host: dict[str, HostRecorder] = {}
+        self.taps: dict[str, TapAccumulator] = {}
+
+    def add_host(self, label: str, fn: Callable, rate: float) -> None:
+        with self._lock:
+            self.host[label] = HostRecorder(label, fn, rate)
+
+    def maybe_record(self, args: tuple, kwargs: dict) -> None:
+        for rec in list(self.host.values()):
+            rec.maybe_record(args, kwargs)
+
+    def absorb_taps(self, taps: Mapping[str, Any]) -> None:
+        with self._lock:
+            for label, value in taps.items():
+                acc = self.taps.setdefault(label, TapAccumulator(label))
+                acc.absorb(value)
+
+    def summary(self) -> dict:
+        out: dict[str, Any] = {}
+        for label, rec in self.host.items():
+            out[label] = rec.summary()
+        for label, acc in self.taps.items():
+            out[label] = acc.summary()
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            for rec in self.host.values():
+                rec.counter.clear()
+                rec.samples = 0
+            self.taps.clear()
+
+
+# --- in-graph tap helpers (used by handler builders) --------------------------
+
+def hist_tap(values: jnp.ndarray, num_bins: int,
+             lo: float = 0.0, hi: float | None = None) -> jnp.ndarray:
+    """Histogram of ``values`` as a dense ``num_bins`` vector.
+
+    Vectorized one-hot + sum: the TPU-idiomatic version of the paper's
+    "range-based" instrumentation (≈1 cycle/op because it fuses with the
+    surrounding computation).
+    """
+    v = values.reshape(-1).astype(jnp.float32)
+    if hi is None:
+        hi = float(num_bins)
+    idx = jnp.clip(((v - lo) / (hi - lo) * num_bins).astype(jnp.int32),
+                   0, num_bins - 1)
+    return jnp.zeros((num_bins,), jnp.int32).at[idx].add(1)
+
+
+def topk_from_counter(summary: Mapping[str, Any], label: str,
+                      n: int) -> list:
+    """Extract top-N observed values for a label from spec_space().observed."""
+    info = summary.get(label)
+    if info is None:
+        return []
+    if info.get("kind") == "host":
+        return [v for v, _ in info["top"][:n]]
+    total = info.get("total")
+    if total is None:
+        return []
+    order = np.argsort(total)[::-1]
+    return [int(i) for i in order[:n] if total[i] > 0]

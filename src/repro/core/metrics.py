@@ -1,0 +1,127 @@
+"""End-to-end performance metrics plumbing (paper §3: "overall system
+performance metrics ... implicitly factor in any overheads").
+
+The policy compares specialization configurations by a single scalar metric
+(throughput by default).  These helpers are what the fixed code uses to
+produce that scalar.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import threading
+import time
+from typing import Deque
+
+__all__ = ["ThroughputCounter", "EWMA", "ChangeDetector", "StepTimer"]
+
+
+class ThroughputCounter:
+    """Thread-safe event counter -> events/second over a sliding window.
+
+    The fixed code bumps it once per processed request/step/token
+    (paper Fig 2b ``tput_counter++``); the policy reads & resets it.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._count = 0
+        self._start = self._clock()
+
+    def add(self, n: int = 1) -> None:
+        with self._lock:
+            self._count += n
+
+    def reset(self) -> None:
+        with self._lock:
+            self._count = 0
+            self._start = self._clock()
+
+    def read(self) -> float:
+        """Events/sec since last reset."""
+        with self._lock:
+            dt = self._clock() - self._start
+            return self._count / dt if dt > 0 else 0.0
+
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+
+class EWMA:
+    """Exponentially-weighted moving average."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.value: float | None = None
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else (
+            self.alpha * x + (1 - self.alpha) * self.value)
+        return self.value
+
+
+class ChangeDetector:
+    """Detects a "large change" in the observed metric (paper §6.3: the
+    FastClick policy "triggers an exploration whenever it detects a large
+    change (>= 25%) in the measured throughput").
+
+    Also doubles as straggler/degradation detection at scale: a persistently
+    slow step time is indistinguishable from a workload change and triggers
+    re-exploration.
+    """
+
+    def __init__(self, threshold: float = 0.25, alpha: float = 0.3,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.ewma = EWMA(alpha)
+        self.warmup = warmup
+        self._n = 0
+
+    def update(self, metric: float) -> bool:
+        """Feed one observation; returns True if a change was detected."""
+        prev = self.ewma.value
+        self.ewma.update(metric)
+        self._n += 1
+        if prev is None or self._n <= self.warmup:
+            return False
+        if prev <= 0:
+            return metric > 0
+        rel = abs(metric - prev) / prev
+        if rel >= self.threshold:
+            # restart the baseline at the new level
+            self.ewma.value = metric
+            self._n = 0
+            return True
+        return False
+
+
+class StepTimer:
+    """Wall-clock step timer with percentile summary (host side)."""
+
+    def __init__(self, window: int = 256, clock=time.perf_counter):
+        self._clock = clock
+        self._samples: Deque[float] = collections.deque(maxlen=window)
+        self._t0: float | None = None
+
+    def __enter__(self):
+        self._t0 = self._clock()
+        return self
+
+    def __exit__(self, *exc):
+        self._samples.append(self._clock() - self._t0)
+        self._t0 = None
+
+    def mean(self) -> float:
+        return sum(self._samples) / len(self._samples) if self._samples else math.nan
+
+    def percentile(self, p: float) -> float:
+        if not self._samples:
+            return math.nan
+        xs = sorted(self._samples)
+        idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+        return xs[idx]
+
+    def clear(self) -> None:
+        self._samples.clear()

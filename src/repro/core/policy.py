@@ -1,0 +1,366 @@
+"""Specialization policies (paper §4.3).
+
+The paper ships "a simple periodic exhaustive search strategy ... as a
+library routine" and expects systems to compose custom strategies from
+building blocks.  These are the building blocks:
+
+* :class:`ExhaustiveSweep` — paper Fig 2b: try every configuration, dwell,
+  keep the best by the end-to-end metric.
+* :class:`CoordinateDescent` — tune one point at a time; scales to product
+  spaces where exhaustive search is too slow (our hillclimbing driver).
+* :class:`EpsilonGreedy` — keep exploiting the best, occasionally re-test.
+* :class:`SuccessiveHalving` — racing: drop the losing half each rung.
+* :class:`Explorer` — the driver the fixed code embeds in its loop; handles
+  the instrument → explore → exploit lifecycle and workload-change
+  re-exploration (paper Fig 7/9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import logging
+import math
+import random
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from repro.core.metrics import ChangeDetector
+from repro.core.points import Config, SpecSpace, config_key
+
+logger = logging.getLogger("repro.core.policy")
+
+__all__ = ["Policy", "ExhaustiveSweep", "CoordinateDescent", "EpsilonGreedy",
+           "SuccessiveHalving", "Explorer", "Phase"]
+
+
+class Policy:
+    """Iterator protocol over candidate configurations.
+
+    ``propose()`` returns the next configuration to try, or ``None`` when the
+    exploration round is complete; ``observe(config, metric)`` feeds the
+    measured end-to-end metric (higher is better); ``best()`` returns the
+    winner so far.
+    """
+
+    def reset(self) -> None:
+        raise NotImplementedError
+
+    def propose(self) -> dict | None:
+        raise NotImplementedError
+
+    def observe(self, config: Config, metric: float) -> None:
+        raise NotImplementedError
+
+    def best(self) -> tuple[dict | None, float]:
+        raise NotImplementedError
+
+
+class _ScoreBoard:
+    def __init__(self):
+        self.scores: dict[tuple, tuple[dict, float]] = {}
+
+    def observe(self, config: Config, metric: float) -> None:
+        key = config_key(config)
+        prev = self.scores.get(key)
+        # Keep the freshest observation (conditions drift over time).
+        self.scores[key] = (dict(config), metric)
+        del prev
+
+    def best(self) -> tuple[dict | None, float]:
+        if not self.scores:
+            return None, -math.inf
+        cfg, metric = max(self.scores.values(), key=lambda cm: cm[1])
+        return dict(cfg), metric
+
+
+class ExhaustiveSweep(Policy):
+    """Try every candidate once (paper's library strategy)."""
+
+    def __init__(self, candidates: Sequence[Config]):
+        self.candidates = [dict(c) for c in candidates]
+        self.reset()
+
+    @classmethod
+    def from_space(cls, space: SpecSpace, labels: Sequence[str] | None = None,
+                   overrides: Mapping[str, Sequence[Any]] | None = None,
+                   include_disabled: bool = False) -> "ExhaustiveSweep":
+        return cls(space.configs(labels, overrides, include_disabled))
+
+    def reset(self) -> None:
+        self._queue = list(self.candidates)
+        self._board = _ScoreBoard()
+
+    def propose(self) -> dict | None:
+        return self._queue.pop(0) if self._queue else None
+
+    def observe(self, config: Config, metric: float) -> None:
+        self._board.observe(config, metric)
+
+    def best(self) -> tuple[dict | None, float]:
+        return self._board.best()
+
+
+class CoordinateDescent(Policy):
+    """One point at a time: sweep a label's candidates with all other labels
+    pinned at the incumbent, adopt the winner, move to the next label.
+    Terminates after a full pass with no improvement (or ``max_passes``).
+
+    Cost is sum(|axis|) per pass instead of prod(|axis|) — the practical
+    choice for the multi-point spaces in our training steps.
+    """
+
+    def __init__(self, space: SpecSpace,
+                 labels: Sequence[str] | None = None,
+                 overrides: Mapping[str, Sequence[Any]] | None = None,
+                 start: Config | None = None,
+                 max_passes: int = 3,
+                 rel_tol: float = 0.0):
+        self.space = space
+        self.labels = list(labels if labels is not None else space.labels())
+        self.overrides = dict(overrides or {})
+        self.start = dict(start or space.default_config())
+        self.max_passes = max_passes
+        self.rel_tol = rel_tol
+        self.reset()
+
+    def _axis(self, label: str) -> list:
+        cands = list(self.overrides.get(label,
+                                        self.space[label].candidates()))
+        return cands
+
+    def reset(self) -> None:
+        self._incumbent = dict(self.start)
+        self._incumbent_metric = -math.inf
+        self._pass = 0
+        self._label_i = 0
+        self._axis_q: list[dict] = []
+        self._improved_this_pass = False
+        self._board = _ScoreBoard()
+        self._done = False
+        self._fill_axis()
+
+    def _fill_axis(self) -> None:
+        while self._label_i < len(self.labels):
+            label = self.labels[self._label_i]
+            axis = self._axis(label)
+            q = []
+            for v in axis:
+                cfg = dict(self._incumbent)
+                cfg[label] = v
+                if config_key(cfg) != config_key(self._incumbent) or \
+                        self._incumbent_metric == -math.inf:
+                    q.append(cfg)
+            if q:
+                self._axis_q = q
+                return
+            self._label_i += 1
+        # pass finished
+        self._pass += 1
+        if not self._improved_this_pass or self._pass >= self.max_passes:
+            self._done = True
+            return
+        self._label_i = 0
+        self._improved_this_pass = False
+        self._fill_axis()
+
+    def propose(self) -> dict | None:
+        if self._done:
+            return None
+        if not self._axis_q:
+            self._label_i += 1
+            self._fill_axis()
+            if self._done or not self._axis_q:
+                return None
+        return self._axis_q.pop(0)
+
+    def observe(self, config: Config, metric: float) -> None:
+        self._board.observe(config, metric)
+        if metric > self._incumbent_metric * (1 + self.rel_tol):
+            if config_key(config) != config_key(self._incumbent):
+                self._improved_this_pass = True
+            self._incumbent = dict(config)
+            self._incumbent_metric = metric
+
+    def best(self) -> tuple[dict | None, float]:
+        if self._incumbent_metric == -math.inf:
+            return self._board.best()
+        return dict(self._incumbent), self._incumbent_metric
+
+
+class EpsilonGreedy(Policy):
+    """Exploit the best-known config; with prob. eps re-test a random one."""
+
+    def __init__(self, candidates: Sequence[Config], eps: float = 0.1,
+                 seed: int = 0):
+        self.candidates = [dict(c) for c in candidates]
+        self.eps = eps
+        self._rng = random.Random(seed)
+        self.reset()
+
+    def reset(self) -> None:
+        self._board = _ScoreBoard()
+        self._unseen = list(self.candidates)
+
+    def propose(self) -> dict | None:
+        if self._unseen:
+            return self._unseen.pop(0)
+        if self._rng.random() < self.eps:
+            return dict(self._rng.choice(self.candidates))
+        cfg, _ = self._board.best()
+        return dict(cfg) if cfg is not None else None
+
+    def observe(self, config: Config, metric: float) -> None:
+        self._board.observe(config, metric)
+
+    def best(self) -> tuple[dict | None, float]:
+        return self._board.best()
+
+
+class SuccessiveHalving(Policy):
+    """Racing: measure all survivors each rung, keep the top half."""
+
+    def __init__(self, candidates: Sequence[Config], keep_frac: float = 0.5):
+        self.candidates = [dict(c) for c in candidates]
+        self.keep_frac = keep_frac
+        self.reset()
+
+    def reset(self) -> None:
+        self._survivors = [dict(c) for c in self.candidates]
+        self._queue = list(self._survivors)
+        self._rung_scores: list[tuple[dict, float]] = []
+        self._board = _ScoreBoard()
+
+    def propose(self) -> dict | None:
+        if not self._queue:
+            if len(self._survivors) <= 1:
+                return None
+            self._rung_scores.sort(key=lambda cm: cm[1], reverse=True)
+            keep = max(1, int(math.ceil(len(self._survivors) * self.keep_frac)))
+            self._survivors = [c for c, _ in self._rung_scores[:keep]]
+            self._rung_scores = []
+            if len(self._survivors) <= 1:
+                return None
+            self._queue = [dict(c) for c in self._survivors]
+        return self._queue.pop(0)
+
+    def observe(self, config: Config, metric: float) -> None:
+        self._board.observe(config, metric)
+        self._rung_scores.append((dict(config), metric))
+
+    def best(self) -> tuple[dict | None, float]:
+        return self._board.best()
+
+
+class Phase(enum.Enum):
+    INSTRUMENT = "instrument"
+    EXPLORE = "explore"
+    EXPLOIT = "exploit"
+
+
+class Explorer:
+    """The lifecycle driver the fixed code embeds in its processing loop.
+
+    Call :meth:`step` once per processed item/step.  The explorer dwells
+    ``dwell`` iterations per candidate, reads the handler's throughput
+    counter as the end-to-end metric, advances the policy, installs the
+    winner, then watches for workload changes and re-explores (paper Fig 9:
+    instrumentation phase ≈100 ms → exploration phase → exploit; re-trigger
+    on ≥25% throughput change).
+    """
+
+    def __init__(
+        self,
+        handler,                       # repro.core.runtime.Handler
+        policy: Policy,
+        dwell: int = 50,
+        metric_fn: Callable[[], float] | None = None,
+        change_detector: ChangeDetector | None = None,
+        instrument_iters: int = 0,
+        instrument_rate: float = 0.01,
+        collectors: Mapping[str, Callable] | None = None,
+        on_instrumented: Callable[["Explorer"], None] | None = None,
+        wait_compiles: bool = True,
+        skip_dwell_after_swap: int = 1,
+    ):
+        self.handler = handler
+        self.policy = policy
+        self.dwell = dwell
+        self.metric_fn = metric_fn or (lambda: handler.tput.read())
+        self.change = change_detector or ChangeDetector()
+        self.instrument_iters = instrument_iters
+        self.instrument_rate = instrument_rate
+        self.collectors = dict(collectors or {})
+        self.on_instrumented = on_instrumented
+        self.wait_compiles = wait_compiles
+        self.skip_dwell_after_swap = skip_dwell_after_swap
+
+        self.phase = Phase.INSTRUMENT if instrument_iters > 0 else Phase.EXPLORE
+        self._iters = 0
+        self._pending: dict | None = None
+        self._explorations = 0
+        self.history: list[tuple[Phase, dict | None, float]] = []
+        if self.phase is Phase.INSTRUMENT:
+            self.handler.enable_instrumentation(rate=instrument_rate,
+                                                collectors=self.collectors)
+        else:
+            self._advance_policy()
+
+    # -- internals -------------------------------------------------------------
+    def _advance_policy(self) -> None:
+        cfg = self.policy.propose()
+        if cfg is None:
+            best, metric = self.policy.best()
+            if best is not None:
+                self.handler.specialize(best, wait=self.wait_compiles)
+            self.phase = Phase.EXPLOIT
+            self._pending = dict(best) if best is not None else None
+            logger.info("explorer: exploiting %s (metric=%.3f)", best, metric)
+        else:
+            self._pending = dict(cfg)
+            self.handler.specialize(cfg, wait=self.wait_compiles)
+            self.phase = Phase.EXPLORE
+        self.handler.tput.reset()
+        self._iters = 0
+
+    def start_exploration(self) -> None:
+        self._explorations += 1
+        self.policy.reset()
+        if self.instrument_iters > 0:
+            self.phase = Phase.INSTRUMENT
+            self.handler.recorders.clear()
+            self.handler.enable_instrumentation(rate=self.instrument_rate,
+                                                collectors=self.collectors)
+            self.handler.tput.reset()
+            self._iters = 0
+        else:
+            self._advance_policy()
+
+    @property
+    def explorations(self) -> int:
+        return self._explorations
+
+    # -- the per-iteration hook ---------------------------------------------------
+    def step(self) -> None:
+        self._iters += 1
+        if self.phase is Phase.INSTRUMENT:
+            if self._iters >= self.instrument_iters:
+                self.handler.disable_instrumentation()
+                if self.on_instrumented is not None:
+                    self.on_instrumented(self)
+                self._advance_policy()
+            return
+        if self.phase is Phase.EXPLORE:
+            if self._iters >= self.dwell:
+                metric = self.metric_fn()
+                self.policy.observe(self._pending, metric)
+                self.history.append((Phase.EXPLORE, dict(self._pending), metric))
+                self._advance_policy()
+            return
+        # EXPLOIT: watch for workload change.
+        if self._iters % self.dwell == 0:
+            metric = self.metric_fn()
+            self.handler.tput.reset()
+            self.history.append((Phase.EXPLOIT, self._pending, metric))
+            if self.change.update(metric):
+                logger.info("explorer: change detected (metric=%.3f) — "
+                            "re-exploring", metric)
+                self.start_exploration()

@@ -1,0 +1,340 @@
+"""The Iridescent specialization runtime (paper §4.4).
+
+Components, mapped from the paper:
+
+* **JIT** — ``jax.jit``.  Each specialized variant is lowered + compiled
+  **off the critical path** in a background executor (paper §6.4:
+  "this compilation happens off the critical path"), using the argument
+  shapes observed at the handler's previous calls.
+* **Trampoline** — :class:`Handler` is a stable callable the fixed code
+  obtains once (``runtime.handler(name)``); it always dispatches to the most
+  recent specialized variant, and *atomically* swaps variants when a new one
+  finishes compiling.
+* **Guards** — before dispatching to a specialized variant the trampoline
+  evaluates the variant's host-side guards against the actual arguments; on
+  failure it transparently re-routes to the generic variant (the paper's
+  exception-unwind path, minus the exception: JAX handlers are functional so
+  there are no side effects to roll back).
+* **Variant cache** — compiled variants are cached by configuration, so
+  re-selecting a previously explored configuration is instant.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import logging
+import threading
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+
+from repro.core import instrumentation as instr_mod
+from repro.core.metrics import ThroughputCounter
+from repro.core.points import Config, SpecSpace, config_key
+from repro.core.specializer import Specialized, specialize_builder
+
+logger = logging.getLogger("repro.core.runtime")
+
+__all__ = ["IridescentRuntime", "Handler", "Variant"]
+
+
+def _abstractify(x: Any) -> Any:
+    """Arrays -> ShapeDtypeStruct (keeping shardings); leave non-arrays as-is."""
+    if isinstance(x, jax.Array):
+        sharding = getattr(x, "sharding", None)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding)
+    return x
+
+
+@dataclasses.dataclass
+class Variant:
+    """One specialized, (possibly) compiled version of a handler."""
+
+    specialized: Specialized
+    jitted: Callable
+    compiled: Any = None          # result of .lower().compile(), if available
+    compile_time_s: float | None = None
+    calls: int = 0
+    guard_misses: int = 0
+
+    @property
+    def config(self) -> dict:
+        return self.specialized.config
+
+    def call(self, *args, **kwargs):
+        self.calls += 1
+        if self.compiled is not None and not kwargs:
+            try:
+                return self.compiled(*args)
+            except Exception:      # layout/placement mismatch: fall back to jit
+                self.compiled = None
+        return self.jitted(*args, **kwargs)
+
+
+class Handler:
+    """The trampoline (paper §4.4.2): a fixed, stable callable.
+
+    "The JIT creates a trampoline function which calls the most recent
+    specialized version of the function. The trampoline function is stored at
+    a fixed address and does not change across runtime updates."
+    """
+
+    def __init__(
+        self,
+        name: str,
+        builder: Callable,
+        runtime: "IridescentRuntime",
+        jit_kwargs: Mapping[str, Any] | None = None,
+    ):
+        self.name = name
+        self.builder = builder
+        self.runtime = runtime
+        self.jit_kwargs = dict(jit_kwargs or {})
+        self._lock = threading.Lock()
+        self._variants: dict[tuple, Variant] = {}
+        self._active_key: tuple | None = None
+        self._generic_key: tuple | None = None
+        self._arg_specs: tuple | None = None   # (abstract args, kwargs)
+        self.space: SpecSpace = SpecSpace()
+        self.tput = ThroughputCounter()
+        self.recorders = instr_mod.RecorderSet()
+        self._instr_rate = 0.0
+        #: most recent host-side guard misses (all variants)
+        self.guard_misses = 0
+        # Build the generic variant eagerly so dispatch always has a fallback.
+        self._install({}, wait=True, activate=True)
+        self._generic_key = self._active_key
+
+    # -- construction of variants ---------------------------------------------
+    def _build_variant(self, config: Config, instrument: bool) -> Variant:
+        spec = specialize_builder(
+            self.builder,
+            config,
+            custom_generators=self.runtime.custom_generators,
+            instrument=instrument,
+            guards_enabled=self.runtime.guards_enabled,
+        )
+        self.space = spec.space if len(spec.space) >= len(self.space) else self.space
+        jit_kwargs = dict(self.jit_kwargs)
+        jit_kwargs.update(self.runtime.jit_overrides)
+        jitted = jax.jit(spec.fn, **jit_kwargs)
+        return Variant(specialized=spec, jitted=jitted)
+
+    def _compile_variant(self, variant: Variant) -> None:
+        """AOT-compile against the last observed argument shapes."""
+        if self._arg_specs is None:
+            return  # no calls yet: compile lazily at first dispatch
+        args, kwargs = self._arg_specs
+        t0 = time.perf_counter()
+        try:
+            lowered = variant.jitted.lower(*args, **kwargs)
+            variant.compiled = lowered.compile()
+            variant.compile_time_s = time.perf_counter() - t0
+        except Exception as e:  # pragma: no cover - defensive
+            logger.warning("AOT compile failed for %s %s: %s",
+                           self.name, variant.config, e)
+            variant.compiled = None
+            variant.compile_time_s = time.perf_counter() - t0
+
+    def _install(self, config: Config, wait: bool, activate: bool,
+                 instrument: bool = False) -> "concurrent.futures.Future | None":
+        key = (config_key(config), bool(instrument))
+        with self._lock:
+            existing = self._variants.get(key)
+        if existing is not None:
+            if activate:
+                with self._lock:
+                    self._active_key = key
+            fut: concurrent.futures.Future = concurrent.futures.Future()
+            fut.set_result(existing)
+            return fut
+
+        def work() -> Variant:
+            variant = self._build_variant(config, instrument)
+            self._compile_variant(variant)
+            with self._lock:
+                self._variants[key] = variant
+                if activate:
+                    self._active_key = key   # atomic swap
+            return variant
+
+        if wait or self.runtime.executor is None:
+            v = work()
+            fut = concurrent.futures.Future()
+            fut.set_result(v)
+            return fut
+        return self.runtime.executor.submit(work)
+
+    # -- paper policy API ------------------------------------------------------
+    def specialize(self, config: Config, wait: bool = False,
+                   instrument: bool = False) -> None:
+        """Select a specialization configuration (paper ``rt.specialize(c)``).
+
+        Compilation happens off the critical path; the trampoline keeps
+        dispatching to the previous variant until the new one is ready.
+        """
+        self.space.validate({k: v for k, v in config.items() if k in self.space})
+        self._install(config, wait=wait, activate=True, instrument=instrument)
+
+    def despecialize(self, wait: bool = True) -> None:
+        """Return to the generic variant."""
+        with self._lock:
+            self._active_key = self._generic_key
+
+    def enable_instrumentation(self, rate: float = 1.0,
+                               collectors: Mapping[str, Callable] | None = None,
+                               wait: bool = True) -> None:
+        """Switch to the instrumented variant of the current config.
+
+        ``rate`` is the sampling rate for *host-side* collectors
+        (paper §6.4 / Fig 11).  ``collectors`` maps label ->
+        ``fn(args, kwargs) -> value`` recorded into ``spec_space().observed``.
+        """
+        self._instr_rate = float(rate)
+        for label, fn in (collectors or {}).items():
+            self.recorders.add_host(label, fn, rate)
+        with self._lock:
+            active = self._variants.get(self._active_key)
+        cfg = active.config if active is not None else {}
+        self._install(cfg, wait=wait, activate=True, instrument=True)
+
+    def disable_instrumentation(self) -> None:
+        self._instr_rate = 0.0
+        with self._lock:
+            active = self._variants.get(self._active_key)
+        if active is not None and active.specialized.instrumented:
+            self._install(active.config, wait=True, activate=True,
+                          instrument=False)
+
+    def spec_space(self) -> SpecSpace:
+        """The handler's specialization space, including instrumentation data
+        (paper: "The policy retrieves this information included in the result
+        of the spec_space call")."""
+        self.space.observed = self.recorders.summary()
+        return self.space
+
+    # -- stats -----------------------------------------------------------------
+    def active_config(self) -> dict:
+        with self._lock:
+            v = self._variants.get(self._active_key)
+        return dict(v.config) if v else {}
+
+    def variants(self) -> list[Variant]:
+        with self._lock:
+            return list(self._variants.values())
+
+    def stats(self) -> dict:
+        with self._lock:
+            vs = list(self._variants.items())
+        return {
+            "variants": len(vs),
+            "guard_misses": self.guard_misses,
+            "active": dict(self._variants[self._active_key].config)
+            if self._active_key in self._variants else None,
+            "compile_times_s": {
+                str(dict(k[0])): v.compile_time_s for k, v in vs
+                if v.compile_time_s is not None
+            },
+        }
+
+    # -- the trampoline itself ---------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        with self._lock:
+            variant = self._variants[self._active_key]
+            generic = self._variants[self._generic_key]
+        # Record argument specs so future variants AOT-compile off-path.
+        if self._arg_specs is None:
+            self._arg_specs = (
+                jax.tree_util.tree_map(_abstractify, args),
+                jax.tree_util.tree_map(_abstractify, kwargs),
+            )
+        # Host-side specialization guards (paper §4.4.3): on miss, fall back
+        # to the generic variant for this invocation.
+        if variant is not generic and not variant.specialized.check_guards(args, kwargs):
+            variant.guard_misses += 1
+            self.guard_misses += 1
+            variant = generic
+        # Host-side instrumentation sampling.
+        if self._instr_rate > 0.0:
+            self.recorders.maybe_record(args, kwargs)
+        out = variant.call(*args, **kwargs)
+        # In-graph instrumentation taps come back as (out, taps).
+        if variant.specialized.instrumented and variant.specialized.space and \
+                isinstance(out, tuple) and len(out) == 2 and isinstance(out[1], dict):
+            out, taps = out
+            self.recorders.absorb_taps(taps)
+        self.tput.add()
+        return out
+
+
+class IridescentRuntime:
+    """Paper Table 2 policy API: the object the *fixed code* talks to."""
+
+    def __init__(self, max_compile_workers: int = 1, async_compile: bool = True,
+                 guards_enabled: bool = True):
+        self.handlers: dict[str, Handler] = {}
+        self.custom_generators: dict[str, Callable] = {}
+        self.jit_overrides: dict[str, Any] = {}
+        self.guards_enabled = guards_enabled
+        self.executor = (
+            concurrent.futures.ThreadPoolExecutor(
+                max_workers=max_compile_workers,
+                thread_name_prefix="iridescent-jit")
+            if async_compile else None)
+
+    # -- registration ----------------------------------------------------------
+    def register(self, name: str, builder: Callable,
+                 **jit_kwargs: Any) -> Handler:
+        """Register handler code; analogous to loading ``handler_code.ll``."""
+        if name in self.handlers:
+            raise ValueError(f"handler {name!r} already registered")
+        h = Handler(name, builder, self, jit_kwargs)
+        self.handlers[name] = h
+        return h
+
+    def handler(self, name: str) -> Handler:
+        """``rt.handler(h)`` — obtain the stable trampoline."""
+        return self.handlers[name]
+
+    def add_custom_spec(self, name: str, generator: Callable) -> None:
+        """``rt.add_custom_spec(n, gen)`` — register a custom code generator."""
+        self.custom_generators[name] = generator
+
+    def customize_opts(self, **jit_kwargs: Any) -> None:
+        """``rt.customize_opts(passes)`` — adjust codegen options.
+
+        XLA's pass pipeline is not user-pluggable the way LLVM's is; the
+        equivalent knobs are jit/compiler options applied to every variant.
+        """
+        self.jit_overrides.update(jit_kwargs)
+
+    # -- space & selection -------------------------------------------------------
+    def spec_space(self, name: str | None = None) -> SpecSpace:
+        if name is not None:
+            return self.handlers[name].spec_space()
+        merged = SpecSpace()
+        observed: dict[str, Any] = {}
+        for h in self.handlers.values():
+            for p in h.spec_space().points.values():
+                merged.register(p)
+            observed.update(h.space.observed)
+        merged.observed = observed
+        return merged
+
+    def specialize(self, config: Config, handler: str | None = None,
+                   wait: bool = False) -> None:
+        """``rt.specialize(c)`` — apply a configuration.
+
+        With ``handler=None`` the config is routed to every handler, each
+        receiving the subset of points it declared.
+        """
+        targets = ([self.handlers[handler]] if handler is not None
+                   else list(self.handlers.values()))
+        for h in targets:
+            sub = {k: v for k, v in config.items() if k in h.spec_space()}
+            h.specialize(sub, wait=wait)
+
+    def shutdown(self) -> None:
+        if self.executor is not None:
+            self.executor.shutdown(wait=True)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import RequestGenerator, SyntheticLM
+
+__all__ = ["RequestGenerator", "SyntheticLM"]

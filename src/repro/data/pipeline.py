@@ -1,0 +1,148 @@
+"""Data pipeline: deterministic synthetic token streams (training) and a
+workload generator with shiftable distributions (serving benchmarks).
+
+Training pipeline properties that matter at scale:
+* **deterministic & restartable** — batch ``i`` is a pure function of
+  (seed, i), so checkpoint/restart resumes the stream exactly (the loader
+  state is one integer);
+* **sharded placement** — batches are placed with the mesh's ``batch``
+  sharding directly (no host gather);
+* **prefetch** — a background thread keeps ``prefetch`` batches in flight so
+  host data work overlaps device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import named_sharding
+
+__all__ = ["SyntheticLM", "RequestGenerator"]
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches: {tokens, labels} (B, S) int32.
+
+    Tokens follow a Zipfian unigram distribution (more realistic compile
+    paths than uniform: embedding gathers hit hot rows, losses vary).
+    """
+
+    def __init__(self, vocab_size: int, batch: int, seq_len: int,
+                 seed: int = 0, start_step: int = 0, zipf_a: float = 1.2,
+                 embeds_dim: int | None = None, prefetch: int = 2,
+                 mesh=None):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.step = start_step
+        self.embeds_dim = embeds_dim
+        self.mesh = mesh
+        # Zipf weights over the vocab (truncated harmonic).
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        w = ranks ** -zipf_a
+        self._cdf = np.cumsum(w / w.sum())
+        self._prefetch_n = prefetch
+        self._q: queue.Queue | None = None
+        self._thread: threading.Thread | None = None
+
+    # -- pure batch function ----------------------------------------------------
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % 2**31)
+        u = rng.rand(self.batch, self.seq_len + 1)
+        toks = np.searchsorted(self._cdf, u).astype(np.int32)
+        toks = np.minimum(toks, self.vocab_size - 1)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.embeds_dim is not None:
+            out["embeds"] = rng.randn(
+                self.batch, self.seq_len, self.embeds_dim).astype(np.float32)
+        return out
+
+    def _place(self, batch: dict[str, np.ndarray]) -> dict[str, jax.Array]:
+        out = {}
+        for k, v in batch.items():
+            axes = ("batch", "seq", None) if v.ndim == 3 else ("batch", "seq")
+            sh = named_sharding(axes, v.shape, self.mesh)
+            out[k] = jax.device_put(v, sh) if sh is not None else jnp.asarray(v)
+        return out
+
+    # -- iterator with prefetch ----------------------------------------------------
+    def _worker(self):
+        while True:
+            b = self.batch_at(self.step)
+            self.step += 1
+            self._q.put(self._place(b))
+
+    def __iter__(self) -> Iterator[dict[str, jax.Array]]:
+        if self._prefetch_n > 0:
+            self._q = queue.Queue(maxsize=self._prefetch_n)
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+            while True:
+                yield self._q.get()
+        else:
+            while True:
+                b = self.batch_at(self.step)
+                self.step += 1
+                yield self._place(b)
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+
+class RequestGenerator:
+    """Serving workload generator with shiftable key/length distributions.
+
+    Reproduces the paper's experiment shapes: a hot-key Zipf over request
+    keys (fast-path experiments, Fig 4/5/9) and a sequence-length mixture
+    (shape-bucketing), both of which can be switched mid-run (``shift()``)
+    to exercise workload-change adaptation (Fig 7/8/9).
+    """
+
+    def __init__(self, key_space: int = 1 << 20, zipf_a: float = 1.3,
+                 lengths: tuple[int, ...] = (128, 256, 512),
+                 length_probs: tuple[float, ...] = (0.7, 0.2, 0.1),
+                 seed: int = 0):
+        self.key_space = key_space
+        self.zipf_a = zipf_a
+        self.lengths = lengths
+        self.length_probs = np.asarray(length_probs, np.float64)
+        self.length_probs /= self.length_probs.sum()
+        self._rng = np.random.RandomState(seed)
+        self._phase = 0
+        self._build()
+
+    def _build(self):
+        n_hot = 4096
+        ranks = np.arange(1, n_hot + 1, dtype=np.float64)
+        w = ranks ** -self.zipf_a
+        self._hot_cdf = np.cumsum(w / w.sum())
+        # phase-dependent hot key identities (disjoint across phases)
+        rs = np.random.RandomState(1234 + self._phase)
+        self._hot_keys = rs.choice(self.key_space, size=n_hot, replace=False)
+
+    def shift(self, lengths=None, length_probs=None, zipf_a=None):
+        """Switch the workload distribution (a 'phase change')."""
+        self._phase += 1
+        if lengths is not None:
+            self.lengths = lengths
+        if length_probs is not None:
+            self.length_probs = np.asarray(length_probs, np.float64)
+            self.length_probs /= self.length_probs.sum()
+        if zipf_a is not None:
+            self.zipf_a = zipf_a
+        self._build()
+
+    def keys(self, n: int) -> np.ndarray:
+        u = self._rng.rand(n)
+        idx = np.searchsorted(self._hot_cdf, u)
+        return self._hot_keys[np.minimum(idx, len(self._hot_keys) - 1)] \
+            .astype(np.int64)
+
+    def batch_lengths(self, n: int) -> np.ndarray:
+        return self._rng.choice(self.lengths, size=n, p=self.length_probs)

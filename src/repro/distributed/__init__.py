@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
+                                        constrain, current_mesh,
+                                        logical_to_spec, mesh_context,
+                                        named_sharding, spec_for_axes)
+from repro.distributed import compression
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "constrain", "current_mesh",
+           "logical_to_spec", "mesh_context", "named_sharding",
+           "spec_for_axes", "compression"]

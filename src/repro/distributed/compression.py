@@ -1,0 +1,58 @@
+"""Cross-pod gradient-compression collectives (distributed-optimization trick).
+
+At 1000+ node scale the cross-pod (DCN) links are the slow tier, so the DP
+reduction over the ``pod`` axis is the collective to compress.  The scheme
+here is an allgather-based int8 reduction (the form that is expressible as a
+single HLO collective with real byte savings):
+
+1. each pod quantizes its partial gradient to int8 with one fp32 scale;
+2. ``all_gather`` ships the int8 payloads (4x fewer bytes on the wire than a
+   fp32 all-reduce ring transfers);
+3. each pod dequantizes and sums locally in fp32.
+
+Combined with the error-feedback state in ``optim.adamw`` (compress=int8_ef)
+the quantization error is re-injected next step, preserving convergence
+(validated numerically in tests/test_optim.py).
+
+The utility is written with ``shard_map`` so the collective appears
+explicitly in the lowered HLO — benchmarks/roofline count its bytes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+__all__ = ["compressed_psum", "compressed_psum_tree"]
+
+
+def _quant(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(x: jnp.ndarray, axis: str, mesh: Mesh) -> jnp.ndarray:
+    """int8-allgather psum of a replicated-over-``axis`` partial value."""
+
+    def body(xl: jnp.ndarray) -> jnp.ndarray:
+        q, scale = _quant(xl.astype(jnp.float32))
+        qs = jax.lax.all_gather(q, axis)                  # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis)              # fp32 scalars
+        deq = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * xl.ndim)
+        return deq.sum(0).astype(xl.dtype)
+
+    specs = P(*([None] * x.ndim))
+    fn = shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                   check_vma=False)
+    return fn(x)
+
+
+def compressed_psum_tree(tree: Any, axis: str, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: compressed_psum(x, axis, mesh), tree)

@@ -1,0 +1,207 @@
+"""Logical-axis sharding: the bridge between model code and the mesh.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "experts", ...).  A :class:`ShardingRules` table maps logical names
+to physical mesh axes (``pod`` / ``data`` / ``model``).  Swapping the rules
+table re-lays-out the whole model — which makes the sharding layout itself an
+Iridescent specialization point (``spec.enum("ffn_sharding", ...)``) that the
+online policy can explore per workload.
+
+Divisibility-aware: a logical axis is only sharded if the dimension is
+divisible by the product of the mapped mesh axis sizes (e.g. 4 kv heads on a
+16-way model axis stay replicated rather than failing to lower) — the
+framework-level analogue of the paper's guarded specialization: an
+inapplicable sharding silently degrades to the generic (replicated) layout.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "mesh_context", "current_mesh",
+           "current_rules", "constrain", "logical_to_spec", "named_sharding",
+           "spec_for_axes"]
+
+
+# Logical axis vocabulary used across the model zoo:
+#   batch       global batch                     -> pod+data
+#   seq         sequence (activations)           -> None (or model for SP)
+#   embed       d_model features                 -> None (acts) / fsdp (params)
+#   heads       q heads                          -> model
+#   kv_heads    kv heads                         -> model if divisible
+#   head_dim    per-head features                -> None
+#   ffn         FFN hidden                       -> model
+#   vocab       vocabulary                       -> model
+#   experts     MoE experts                      -> model (EP)
+#   expert_cap  per-expert capacity rows         -> None
+#   fsdp        param rows for ZeRO-3 sharding   -> data (+pod optional)
+#   layers      stacked layer dim (scan)         -> None
+#   state       recurrent state features         -> None
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple[tuple[str, tuple[str, ...] | None], ...]
+
+    @staticmethod
+    def make(mapping: Mapping[str, Any]) -> "ShardingRules":
+        norm = []
+        for k, v in mapping.items():
+            if v is None:
+                norm.append((k, None))
+            elif isinstance(v, str):
+                norm.append((k, (v,)))
+            else:
+                norm.append((k, tuple(v)))
+        return ShardingRules(tuple(norm))
+
+    def get(self, name: str) -> tuple[str, ...] | None:
+        for k, v in self.rules:
+            if k == name:
+                return v
+        raise KeyError(f"no sharding rule for logical axis {name!r}")
+
+    def replace(self, **updates: Any) -> "ShardingRules":
+        d = dict(self.rules)
+        for k, v in updates.items():
+            d[k] = None if v is None else ((v,) if isinstance(v, str) else tuple(v))
+        return ShardingRules.make(d)
+
+
+DEFAULT_RULES = ShardingRules.make({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("pod", "data"),
+    "expert_ffn": None,
+    "moe_groups": ("pod", "data"),
+    "fsdp": ("data",),
+    "expert_fsdp": ("data",),
+    "layers": None,
+    "state": None,
+    "conv": None,
+})
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: ShardingRules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: ShardingRules | None = None):
+    """Activate a mesh + rules table for model code run inside."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> ShardingRules:
+    return _CTX.rules
+
+
+def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def logical_to_spec(axes: Sequence[str | None],
+                    shape: Sequence[int] | None = None,
+                    mesh: Mesh | None = None,
+                    rules: ShardingRules | None = None) -> P:
+    """Map logical axis names to a PartitionSpec, dropping indivisible axes."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    parts = []
+    used: set[str] = set()
+    for i, name in enumerate(axes):
+        if name is None:
+            parts.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None or mesh is None:
+            parts.append(None)
+            continue
+        # a mesh axis can shard at most one dim: first-come-first-served
+        phys = tuple(a for a in phys if a in mesh.shape and a not in used)
+        if not phys:
+            parts.append(None)
+            continue
+        if shape is not None:
+            n = _axis_size(mesh, phys)
+            if n == 0 or shape[i] % n != 0:
+                parts.append(None)  # degrade to replicated (guarded layout)
+                continue
+        used.update(phys)
+        parts.append(phys if len(phys) > 1 else phys[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(axes: Sequence[str | None],
+                   shape: Sequence[int] | None = None,
+                   mesh: Mesh | None = None,
+                   rules: ShardingRules | None = None) -> NamedSharding | None:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axes; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for_axes(axes_tree: Any, shapes_tree: Any = None,
+                  mesh: Mesh | None = None,
+                  rules: ShardingRules | None = None) -> Any:
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    ``axes_tree`` leaves are tuples of logical names (or None).  If
+    ``shapes_tree`` is given (matching pytree of shapes / arrays /
+    ShapeDtypeStructs), divisibility is checked per leaf.
+    """
+    mesh = mesh or current_mesh()
+
+    def one(axes, shaped=None):
+        shape = getattr(shaped, "shape", shaped)
+        return named_sharding(axes, shape, mesh, rules)
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            one, axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))

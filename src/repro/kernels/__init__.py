@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for perf-critical compute hot spots.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ``ops.py`` (jitted wrapper with xla|pallas|interpret impl switch),
+``ref.py`` (pure-jnp oracle).  Kernels are validated against their oracle in
+interpret mode on CPU; the ``xla`` path is what the multi-pod dry-run lowers.
+
+The paper's compute hot spot is the blocked matmul whose block size it
+specializes (MMulBlockBench); ``matmul`` is its TPU adaptation (BlockSpec
+tiles = the specialized constants).  ``attention`` and ``rmsnorm`` are the
+LM framework's hot spots with the same tile-size spec points; ``fastpath``
+is the TPU-native form of the paper's Morpheus-style hot-key if-else chain.
+"""
+from repro.kernels import (attention, fastpath, linear_attention,
+                           matmul, rmsnorm)
+from repro.kernels.common import default_impl, resolve_impl
+
+__all__ = ["attention", "fastpath", "linear_attention", "matmul",
+           "rmsnorm", "default_impl", "resolve_impl"]

@@ -1,0 +1,154 @@
+"""Flash attention Pallas TPU kernel (causal, sliding-window, GQA).
+
+Online-softmax tiling (Dao et al.) adapted to the TPU memory hierarchy:
+
+* the q tile ``(block_q, head_dim)`` and the fp32 accumulator stay resident
+  in VMEM across the kv-contraction grid dimension (innermost);
+* running max/sum live in ``(block_q, 128)`` VMEM scratch (lane-replicated —
+  TPU vector registers are (8, 128) tiles, a 1-D (block_q,) scratch would not
+  lay out);
+* GQA is folded into the BlockSpec index map (``q_head // group``) so K/V
+  tiles are fetched once per kv head, never materialized repeated;
+* causal + sliding-window masking is applied per tile, and tiles that are
+  fully masked are *skipped* (``pl.when``) — with the window baked in as a
+  compile-time constant, the skipped-block condition const-folds, which is
+  exactly the paper's "cascading optimizations from baking constants".
+
+``block_q`` / ``block_kv`` are Iridescent spec points at the step-builder
+level (the VMEM-tiling analogue of the paper's matmul block size ``B``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.attention.ref import NEG_INF
+
+__all__ = ["flash_attention_pallas"]
+
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_kv: int, n_kv: int, q_offset: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Tile-level relevance: last row of this q tile vs first col of kv tile.
+    row_last = q_offset + (iq + 1) * block_q - 1
+    col_first = ikv * block_kv
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(col_first <= row_last)
+    if window is not None:
+        row_first = q_offset + iq * block_q
+        col_last = (ikv + 1) * block_kv - 1
+        relevant = jnp.logical_and(relevant, col_last > row_first - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0]                      # (block_q, d)
+        k = k_ref[0]                      # (block_kv, d)
+        v = v_ref[0]                      # (block_kv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (block_q, block_kv)
+
+        rows = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        cols = ikv * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                              # (block_q,)
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # Fully-masked rows: m_new == NEG_INF -> p underflows to exp(0)=1!
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (block_q, d)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ikv == n_kv - 1)
+    def _flush():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)   # padded / fully-masked rows
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "block_q",
+                     "block_kv", "group", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,            # (BH, Sq, D)   flattened batch*q_heads
+    k: jnp.ndarray,            # (BHk, Skv, D) flattened batch*kv_heads
+    v: jnp.ndarray,            # (BHk, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    group: int = 1,            # q heads per kv head (GQA)
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    bhk, skv, _ = k.shape
+    dv = v.shape[-1]                 # may differ from d (e.g. MLA)
+    assert bh == bhk * group, (q.shape, k.shape, group)
+    assert sq % block_q == 0 and skv % block_kv == 0, (
+        f"seq ({sq},{skv}) not divisible by blocks ({block_q},{block_kv})")
+    scale = scale if scale is not None else d ** -0.5
+    q_offset = q_offset if q_offset is not None else skv - sq
+    n_kv = skv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda h, i, j, group=group: (h // group, j, 0)),
+            pl.BlockSpec((1, block_kv, dv),
+                         lambda h, i, j, group=group: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""Public attention op with impl switch (xla | pallas | interpret).
+
+Input layout is ``(B, H, S, D)``; the Pallas path flattens (B, H) into the
+grid's head dimension and folds GQA into the BlockSpec index map.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.attention import ref
+from repro.kernels.attention.kernel import flash_attention_pallas
+
+__all__ = ["attention"]
+
+
+def attention(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hk, Skv, D)
+    v: jnp.ndarray,            # (B, Hk, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    impl: str | None = None,
+    swa_impl: str = "full",
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        if (swa_impl == "banded" and window is not None and causal
+                and q.shape[2] == k.shape[2] and q.shape[2] % window == 0):
+            return ref.banded_attention(q, k, v, window=window, scale=scale)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset)
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    group = h // hk
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    out = flash_attention_pallas(
+        q.reshape(b * h, sq, d),
+        k.reshape(b * hk, skv, d),
+        v.reshape(b * hk, skv, dv),
+        causal=causal, window=window, scale=scale, q_offset=q_offset,
+        block_q=bq, block_kv=bkv, group=group,
+        interpret=(impl == "interpret"),
+    )
+    return out.reshape(b, h, sq, dv)

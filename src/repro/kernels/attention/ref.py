@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA).
+
+``banded_attention`` is the memory-optimal XLA formulation for sliding
+windows: it materializes only the (S, 2W) diagonal band of scores instead of
+the full (S, S) matrix — the beyond-paper optimization for SWA archs
+(hymba) at long context.  Selected by the ``swa_impl`` spec point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention", "banded_attention", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def attention(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hk, Skv, D)
+    v: jnp.ndarray,            # (B, Hk, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding window size (cols > row-window)
+    scale: float | None = None,
+    q_offset: int | None = None,  # position of q[0] within kv; default Skv-Sq
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    assert h % hk == 0, (h, hk)
+    group = h // hk
+    if group > 1:  # GQA: expand kv heads
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    q_offset = q_offset if q_offset is not None else skv - sq
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    rows = jnp.arange(sq)[:, None] + q_offset
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def banded_attention(
+    q: jnp.ndarray,            # (B, H, S, D)
+    k: jnp.ndarray,            # (B, Hk, S, D)
+    v: jnp.ndarray,            # (B, Hk, S, Dv)
+    *,
+    window: int,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Causal sliding-window attention over the diagonal band only.
+
+    Equivalent to ``attention(..., causal=True, window=window)`` for
+    self-attention (q_offset == 0); scores cost O(S * 2W) instead of O(S^2).
+    Requires S % window == 0 (callers pad — or the ``assume_len_div`` spec
+    point removes the padding).
+    """
+    b, h, s, d = q.shape
+    _, hk, _, _ = k.shape
+    dv = v.shape[-1]
+    w = window
+    assert s % w == 0, (s, w)
+    group = h // hk
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    nb = s // w
+
+    qb = q.reshape(b, h, nb, w, d)
+    kb = k.reshape(b, h, nb, w, d)
+    vb = v.reshape(b, h, nb, w, dv)
+    # previous kv block (block 0's previous is masked out)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], 2)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], 2)
+    k2 = jnp.concatenate([k_prev, kb], 3)          # (B,H,nb,2W,D)
+    v2 = jnp.concatenate([v_prev, vb], 3)          # (B,H,nb,2W,Dv)
+
+    sc = jnp.einsum("bhnqd,bhnkd->bhnqk", qb, k2,
+                    preferred_element_type=jnp.float32) * scale
+    r = jnp.arange(w)[:, None]
+    c = jnp.arange(2 * w)[None, :]
+    mask = (c <= w + r) & (c > r)                  # causal + window, any block
+    first = (c >= w) & (c <= w + r)                # block 0: no prev block
+    sc = jnp.where(
+        jnp.where(jnp.arange(nb)[:, None, None] == 0, first[None], mask[None]),
+        sc, NEG_INF)
+    p = jnp.exp(sc - sc.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhnqk,bhnkv->bhnqv", p.astype(jnp.float32),
+                     v2.astype(jnp.float32))
+    return out.reshape(b, h, s, dv).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Shared kernel plumbing: implementation selection & tiling helpers.
+
+Every kernel package exposes ``ops.py`` with an ``impl=`` switch:
+
+* ``"xla"``      — the pure-jnp reference composition (``ref.py``), jitted.
+                   This is what the multi-pod dry-run lowers (no TPU backend
+                   in this container), and the numerical oracle.
+* ``"pallas"``   — the TPU kernel (``pl.pallas_call`` + BlockSpec VMEM
+                   tiling).  The TARGET implementation on real hardware.
+* ``"interpret"``— the same Pallas kernel in interpreter mode: the kernel
+                   body runs in Python on CPU, validating the kernel logic
+                   (used by tests on this CPU-only container).
+
+The choice of implementation is itself a specialization point in the model
+step builders (``spec.enum("kernel_impl", ...)``).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_impl", "resolve_impl", "cdiv", "pad_to_multiple"]
+
+_VALID = ("xla", "pallas", "interpret")
+
+
+def default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def resolve_impl(impl: str | None) -> str:
+    impl = impl or default_impl()
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
+    return impl
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to_multiple(x, multiple: int, axis: int):
+    """Zero-pad ``axis`` of ``x`` up to the next multiple. Returns (padded, n)."""
+    import jax.numpy as jnp
+
+    n = x.shape[axis]
+    target = cdiv(n, multiple) * multiple
+    if target == n:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads), n

@@ -1,0 +1,3 @@
+from repro.kernels.fastpath.ops import lookup
+
+__all__ = ["lookup"]

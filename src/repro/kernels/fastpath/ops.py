@@ -1,0 +1,24 @@
+"""Public fast-path lookup op with impl switch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, pad_to_multiple, resolve_impl
+from repro.kernels.fastpath import ref
+from repro.kernels.fastpath.kernel import fastpath_lookup_pallas
+
+__all__ = ["lookup"]
+
+
+def lookup(x: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray, *,
+           block_b: int = 256, impl: str | None = None
+           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.lookup(x, keys, values)
+    b = x.shape[0]
+    bb = min(block_b, b)
+    xp, _ = pad_to_multiple(x, bb, 0)
+    out, hit = fastpath_lookup_pallas(xp, keys, values, block_b=bb,
+                                      interpret=(impl == "interpret"))
+    return out[:b], hit[:b]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fast-path hot-key matcher."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lookup"]
+
+
+def lookup(x: jnp.ndarray,        # (B, K) query keys
+           keys: jnp.ndarray,     # (N, K) hot keys (constants when baked)
+           values: jnp.ndarray,   # (N, V) precomputed outputs
+           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(out (B, V), hit (B,))``; out rows are 0 where miss."""
+    match = jnp.all(x[:, None, :] == keys[None, :, :], axis=-1)   # (B, N)
+    hit = jnp.any(match, axis=-1)
+    onehot = match.astype(values.dtype)
+    out = onehot @ values                                          # (B, V)
+    return out, hit

@@ -1,0 +1,3 @@
+from repro.kernels.linear_attention.ops import linear_attention
+
+__all__ = ["linear_attention"]

@@ -1,0 +1,25 @@
+"""Public chunked linear-attention op with impl switch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.linear_attention import ref
+from repro.kernels.linear_attention.kernel import linear_attention_pallas
+
+__all__ = ["linear_attention"]
+
+
+def linear_attention(q, k, v, log_w, *, bonus=None, inclusive: bool = False,
+                     chunk: int = 64, impl: str | None = None):
+    """q/k (BH,T,dk), v (BH,T,dv), log_w (BH,T,dk) or (BH,T,1),
+    bonus (BH,dk)|None -> (BH,T,dv)."""
+    impl = resolve_impl(impl)
+    log_w = jnp.broadcast_to(log_w, q.shape)
+    if impl == "xla":
+        return ref.linear_attention(q, k, v, log_w, bonus=bonus,
+                                    inclusive=inclusive, chunk=chunk)
+    c = min(chunk, q.shape[1])
+    return linear_attention_pallas(q, k, v, log_w, bonus,
+                                   inclusive=inclusive, chunk=c,
+                                   interpret=(impl == "interpret"))

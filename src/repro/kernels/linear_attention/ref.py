@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the chunked linear-attention kernel: re-exports the
+loop-free chunked formulation from ``repro.models.chunk_scan`` (itself
+validated against a per-step recurrence oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.chunk_scan import (chunked_linear_attention,
+                                     naive_linear_attention)
+
+__all__ = ["linear_attention", "chunked_linear_attention",
+           "naive_linear_attention"]
+
+
+def linear_attention(q, k, v, log_w, *, bonus=None, inclusive=False,
+                     chunk: int = 64):
+    """Batched-head wrapper: q/k (BH,T,dk), v (BH,T,dv), log_w (BH,T,dk),
+    bonus (BH,dk) or None -> (BH,T,dv)."""
+    if bonus is None:
+        fn = jax.vmap(lambda q_, k_, v_, w_: chunked_linear_attention(
+            q_, k_, v_, w_, inclusive=inclusive, chunk=chunk))
+        return fn(q, k, v, log_w)
+    fn = jax.vmap(lambda q_, k_, v_, w_, u_: chunked_linear_attention(
+        q_, k_, v_, w_, bonus=u_, inclusive=inclusive, chunk=chunk))
+    return fn(q, k, v, log_w, bonus)

@@ -1,0 +1,3 @@
+from repro.kernels.matmul.ops import matmul
+
+__all__ = ["matmul"]

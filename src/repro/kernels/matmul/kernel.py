@@ -1,0 +1,78 @@
+"""Blocked matmul Pallas TPU kernel — the paper's running example (§2.1).
+
+The paper's MMulBlockBench specializes the block size ``B`` of a cache-blocked
+matmul; baking ``B`` as a compile-time constant lets the compiler unroll and
+vectorize the inner loops (up to 6.5x, Table 1/3).  The TPU adaptation: the
+block sizes ``(bm, bn, bk)`` are the BlockSpec tile shape — they determine the
+VMEM working set and the MXU pipeline shape, and are *always* compile-time
+constants in a Pallas kernel.  The Iridescent spec points pick which constants
+to bake, and the online policy finds the per-(workload, chip) optimum, exactly
+like Table 1 does per (matrix size, processor).
+
+Grid layout: ``(m/bm, n/bn, k/bk)`` with the contraction innermost so the
+fp32 accumulator tile stays resident in VMEM scratch across k-steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul_pallas"]
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
+def matmul_pallas(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``x (m, k) @ y (k, n)`` with explicit VMEM tiling.
+
+    Requires ``m % bm == n % bn == k % bk == 0`` (the ops wrapper pads, or the
+    ``assume_divisible`` spec point removes the padding code entirely).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tiles ({bm},{bn},{bk})")
+    out_dtype = out_dtype or x.dtype
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, y)

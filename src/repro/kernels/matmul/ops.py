@@ -1,0 +1,48 @@
+"""Jitted public op for the blocked matmul, with impl switch + padding guard.
+
+``assume_divisible=True`` is the kernel-level effect of the paper's
+``spec_assume("N % B == 0")``: the padding/cropping code is removed entirely
+from the compiled program (dead-code elimination by construction); the host
+guard at the handler level ensures the assumption actually holds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, resolve_impl
+from repro.kernels.matmul import ref
+from repro.kernels.matmul.kernel import matmul_pallas
+
+__all__ = ["matmul"]
+
+
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    impl: str | None = None,
+    assume_divisible: bool = False,
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    out_dtype = out_dtype or x.dtype
+    if impl == "xla":
+        return ref.matmul(x, y, out_dtype=out_dtype)
+
+    interpret = impl == "interpret"
+    if assume_divisible:
+        return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                             interpret=interpret)
+    m, n = x.shape[0], y.shape[1]
+    xp, _ = pad_to_multiple(x, bm, 0)
+    xp, _ = pad_to_multiple(xp, bk, 1)
+    yp, _ = pad_to_multiple(y, bk, 0)
+    yp, _ = pad_to_multiple(yp, bn, 1)
+    out = matmul_pallas(xp, yp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                        interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["matmul"]
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray,
+           out_dtype=None) -> jnp.ndarray:
+    """``x @ y`` with fp32 accumulation (matches the kernel's MXU accum)."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)

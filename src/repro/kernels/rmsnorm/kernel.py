@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One VMEM pass: load a ``(block_rows, d)`` tile, compute the row RMS and the
+scaled output without re-reading ``x`` from HBM (XLA often splits the
+reduction and the scale into two HBM passes at large ``d``).  ``block_rows``
+is a spec point; ``d`` stays whole so the reduction is a single-tile op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rmsnorm_pallas"]
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (block_rows, d)
+    w = w_ref[...].astype(jnp.float32)            # (1, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm_pallas(
+    x: jnp.ndarray,        # (rows, d)
+    weight: jnp.ndarray,   # (d,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    rows, d = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, weight.reshape(1, d))

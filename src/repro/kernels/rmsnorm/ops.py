@@ -1,0 +1,24 @@
+"""Public RMSNorm op with impl switch; accepts any leading batch dims."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, resolve_impl
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+__all__ = ["rmsnorm"]
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6,
+            block_rows: int = 256, impl: str | None = None) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.rmsnorm(x, weight, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    br = min(block_rows, x2.shape[0])
+    xp, rows = pad_to_multiple(x2, br, 0)
+    out = rmsnorm_pallas(xp, weight, eps=eps, block_rows=br,
+                         interpret=(impl == "interpret"))
+    return out[:rows].reshape(shape)

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first lines, before any jax import: jax locks the device
+#    count at first init.  This flag exists ONLY here — smoke tests and
+#    benches see the real single CPU device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+  1. ``jax.jit(step).lower(*ShapeDtypeStructs).compile()`` on the production
+     mesh (single-pod 16x16 = 256 chips, and multi-pod 2x16x16 = 512 chips);
+  2. print/record ``compiled.memory_analysis()`` (fits-per-device proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes);
+  3. parse the compiled HLO for collective ops and sum their bytes;
+  4. lower depth-1 / depth-2 *unrolled* surrogates and extrapolate the
+     roofline terms affinely in layer count (XLA's cost model visits a scan
+     body once, so the scanned full-depth numbers undercount; the surrogate
+     numbers are the honest ones — both are recorded).
+
+Results land in ``artifacts/dryrun/<mesh>/<arch>__<shape>[__tag].json``;
+``benchmarks/roofline.py`` renders the EXPERIMENTS.md tables from them.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import SHAPES, Shape, input_specs, supported_shapes
+from repro.core.specializer import specialize_builder
+from repro.distributed.sharding import (DEFAULT_RULES, named_sharding,
+                                        spec_for_axes)
+from repro.launch.mesh import make_production_mesh
+from repro.models import ModelConfig, RunOptions
+from repro.models import transformer as model
+from repro.optim import OptConfig, init_opt_state, opt_state_axes
+from repro.training.steps import (SHARDING_PROFILES, make_decode_builder,
+                                  make_prefill_builder, make_train_builder)
+
+# v5e hardware constants for the roofline terms.
+PEAK_FLOPS = 197e12           # bf16 FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from optimized HLO."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] = out.get(kind, 0.0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = count
+    return out
+
+
+def _attach(specs_tree, shardings_tree):
+    """Attach NamedShardings to ShapeDtypeStructs (for AOT .lower)."""
+    def one(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree_util.tree_map(one, specs_tree, shardings_tree)
+
+
+def _rules_for(spec_cfg: dict, kind: str):
+    prof = spec_cfg.get("sharding_profile", "fsdp")
+    rules = SHARDING_PROFILES[prof](DEFAULT_RULES)
+    if kind == "decode" and spec_cfg.get("cache_layout", "seq") == "seq":
+        rules = rules.replace(seq_kv="model")
+    return rules
+
+
+def _depth_variant(cfg: ModelConfig, n: int) -> ModelConfig:
+    """Reduced-depth config for affine FLOP extrapolation (n = layers in the
+    varying stack; the dense prefix of MoE archs stays at its full size)."""
+    if cfg.is_moe:
+        return cfg.replace(n_layers=cfg.n_dense_layers + n)
+    return cfg.replace(n_layers=n)
+
+
+def _n_varying(cfg: ModelConfig) -> int:
+    return cfg.n_moe_layers if cfg.is_moe else cfg.n_layers
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: Shape
+    spec_cfg: dict
+    opt: OptConfig
+
+
+def build_lowerable(cfg: ModelConfig, shape: Shape, mesh, spec_cfg: dict,
+                    opt_cfg: OptConfig, scan_layers: bool):
+    """Returns (step_fn, example_args) ready for jit().lower()."""
+    kind = shape.kind
+    rules = _rules_for(spec_cfg, kind)
+    kw = dict(mesh=mesh, kernel_impl="xla", scan_layers=scan_layers)
+    key = jax.random.PRNGKey(0)
+
+    p_shapes = jax.eval_shape(lambda: model.init_params(key, cfg))
+    p_sh = spec_for_axes(model.param_axes(cfg), p_shapes, mesh, rules)
+    params_arg = _attach(p_shapes, p_sh)
+    batch_shapes = input_specs(cfg, shape)
+
+    def batch_sharding(s):
+        axes = ("batch", "seq", None)[: s.ndim] if s.ndim else ()
+        return named_sharding(axes, s.shape, mesh, rules)
+
+    if kind == "train":
+        builder = make_train_builder(cfg, opt_cfg, **kw)
+        step = specialize_builder(builder, spec_cfg).fn
+        o_shapes = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), p_shapes)
+        o_ax = opt_state_axes(model.param_axes(cfg), opt_cfg)
+        o_sh = spec_for_axes(o_ax, o_shapes, mesh, rules)
+        state = {"params": params_arg, "opt": _attach(o_shapes, o_sh)}
+        batch = {k: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                         sharding=batch_sharding(s))
+                 for k, s in batch_shapes.items()}
+        return step, (state, batch), dict(donate_argnums=0)
+
+    if kind == "prefill":
+        builder = make_prefill_builder(cfg, **kw)
+        step = specialize_builder(builder, spec_cfg).fn
+        batch = {k: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                         sharding=batch_sharding(s))
+                 for k, s in batch_shapes.items()}
+        return step, (params_arg, batch), {}
+
+    # decode
+    builder = make_decode_builder(cfg, **kw)
+    step = specialize_builder(builder, spec_cfg).fn
+    ropts = RunOptions(
+        decode_cache_dtype=spec_cfg.get("cache_dtype", "bfloat16"))
+    c_shapes = jax.eval_shape(
+        lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 ropts))
+    c_sh = spec_for_axes(model.cache_axes(cfg), c_shapes, mesh, rules)
+    cache_arg = _attach(c_shapes, c_sh)
+    toks = jax.ShapeDtypeStruct(
+        (shape.global_batch,), jnp.int32,
+        sharding=named_sharding(("batch",), (shape.global_batch,), mesh,
+                                rules))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=named_sharding((), (), mesh, rules))
+    return step, (params_arg, cache_arg, toks, pos), dict(donate_argnums=1)
+
+
+def analyze(cfg: ModelConfig, shape: Shape, mesh, spec_cfg: dict,
+            opt_cfg: OptConfig, scan_layers: bool) -> dict:
+    step, args, jit_kw = build_lowerable(cfg, shape, mesh, spec_cfg, opt_cfg,
+                                         scan_layers)
+    t0 = time.perf_counter()
+    lowered = jax.jit(step, **jit_kw).lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_d[attr] = int(v)
+    ca = compiled.cost_analysis() or {}
+    cost = {k: float(ca[k]) for k in ("flops", "bytes accessed") if k in ca}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "memory": mem_d,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, mesh, spec_cfg: dict,
+             opt_cfg: OptConfig, surrogate: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    n_chips = mesh.devices.size
+    result: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(n_chips), "spec": {k: str(v) for k, v in spec_cfg.items()},
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    # 1) full-depth compile (scan): memory + collective schedule proof.
+    full = analyze(cfg, shape, mesh, spec_cfg, opt_cfg, scan_layers=True)
+    result["full"] = full
+
+    # 2) depth surrogates (unrolled): honest roofline terms.
+    if surrogate:
+        a1 = analyze(_depth_variant(cfg, 1), shape, mesh, spec_cfg, opt_cfg,
+                     scan_layers=False)
+        a2 = analyze(_depth_variant(cfg, 2), shape, mesh, spec_cfg, opt_cfg,
+                     scan_layers=False)
+        n = _n_varying(cfg)
+
+        def extrap(k1, k2):
+            return k1 + (n - 1) * (k2 - k1)
+
+        flops = extrap(a1["flops"], a2["flops"])
+        bbytes = extrap(a1["bytes"], a2["bytes"])
+        cbytes = extrap(a1["collectives"]["total"],
+                        a2["collectives"]["total"])
+        result["surrogate"] = {"d1": a1, "d2": a2}
+        result["roofline_input"] = {"flops": flops, "bytes": bbytes,
+                                    "collective_bytes": cbytes}
+    else:
+        result["roofline_input"] = {
+            "flops": full["flops"], "bytes": full["bytes"],
+            "collective_bytes": full["collectives"]["total"]}
+
+    # 3) roofline terms.  cost_analysis is per-device under SPMD, so terms
+    #    divide by per-chip peaks directly; model FLOPs are global -> /chips.
+    ri = result["roofline_input"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    model_flops = 6 * n_active * tokens if shape.kind == "train" else \
+        2 * n_active * tokens
+    compute_t = ri["flops"] / PEAK_FLOPS
+    memory_t = ri["bytes"] / HBM_BW
+    collective_t = ri["collective_bytes"] / ICI_BW
+    dominant = max(("compute", compute_t), ("memory", memory_t),
+                   ("collective", collective_t), key=lambda kv: kv[1])[0]
+    result["roofline"] = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / max(ri["flops"], 1.0),
+        "tokens": tokens,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see repro.configs.ARCH_IDS)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--spec", default="{}", help="JSON spec-point config")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-surrogate", action="store_true")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "int8_ef"))
+    args = ap.parse_args()
+
+    spec_cfg = json.loads(args.spec)
+    opt_cfg = OptConfig(compress=args.compress)
+    archs = list(configs.ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "multi" if multi else "single"
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            cfg = configs.get_config(arch)
+            shapes = (supported_shapes(cfg) if args.shape == "all"
+                      else [args.shape])
+            for shape_name in shapes:
+                tag = f"__{args.tag}" if args.tag else ""
+                fn = os.path.join(outdir, f"{arch}__{shape_name}{tag}.json")
+                print(f"=== {mesh_name} {arch} {shape_name} ===", flush=True)
+                try:
+                    t0 = time.perf_counter()
+                    res = run_cell(arch, shape_name, mesh_name, mesh,
+                                   spec_cfg, opt_cfg,
+                                   surrogate=not args.no_surrogate)
+                    res["wall_s"] = time.perf_counter() - t0
+                    with open(fn, "w") as f:
+                        json.dump(res, f, indent=1)
+                    rf = res["roofline"]
+                    mem = res["full"]["memory"]
+                    print(f"  ok in {res['wall_s']:.1f}s: "
+                          f"compute={rf['compute_s']:.4f}s "
+                          f"memory={rf['memory_s']:.4f}s "
+                          f"collective={rf['collective_s']:.4f}s "
+                          f"dominant={rf['dominant']} "
+                          f"useful={rf['useful_flops_ratio']:.3f} "
+                          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:
+                    print(f"  FAILED: {e}", flush=True)
+                    traceback.print_exc()
+                    with open(fn.replace(".json", ".error.txt"), "w") as f:
+                        f.write(traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (§Perf): runs the hypothesis->change->measure
+iteration chains for the three selected (arch x shape) cells, writing tagged
+artifacts next to the baselines.  Each entry is one iteration: the spec
+config *delta* is cumulative within a chain.
+
+The narrative (hypothesis / predicted effect) lives in EXPERIMENTS.md §Perf;
+this driver produces the measured numbers it cites.
+"""
+import json
+import time
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.optim import OptConfig
+
+# (tag, cumulative spec config) per cell — see EXPERIMENTS.md §Perf for the
+# hypothesis behind each step.
+CHAINS = {
+    ("kimi-k2-1t-a32b", "train_4k"): [
+        ("a1_gather", {"moe_impl": "gather"}),
+        ("a2_sort", {"moe_impl": "gather", "moe_ranking": "sort"}),
+        ("a3_mem", {"moe_impl": "gather", "moe_ranking": "sort",
+                    "remat": "dots", "logits_dtype": "bfloat16"}),
+        ("a4_noexpfsdp", {"moe_impl": "gather", "moe_ranking": "sort",
+                          "remat": "dots", "logits_dtype": "bfloat16",
+                          "sharding_profile": "fsdp_noexp"}),
+        ("a5_micro", {"moe_impl": "gather", "moe_ranking": "sort",
+                      "remat": "dots", "logits_dtype": "bfloat16",
+                      "sharding_profile": "fsdp_noexp", "microbatch": 4}),
+        # diagnostics on the collective term (dispatch resharding volume)
+        ("a6_group", {"moe_impl": "gather", "moe_ranking": "sort",
+                      "remat": "dots", "logits_dtype": "bfloat16",
+                      "moe_group": 4096}),
+        ("a7_cf10", {"moe_impl": "gather", "moe_ranking": "sort",
+                     "remat": "dots", "logits_dtype": "bfloat16",
+                     "capacity_factor": 1.0}),
+        # the endgame identified by a4/a7: explicit-EP dispatch (shard_map),
+        # zero dispatch collectives, one TP psum per layer
+        ("a8_shard", {"moe_impl": "shard", "remat": "dots",
+                      "logits_dtype": "bfloat16",
+                      "sharding_profile": "fsdp_noexp"}),
+        ("a9_noremat", {"moe_impl": "shard",
+                        "logits_dtype": "bfloat16",
+                        "sharding_profile": "fsdp_noexp"}),
+    ],
+    ("kimi-k2-1t-a32b", "decode_32k"): [
+        ("b1_serveep", {"sharding_profile": "serve_ep"}),
+        ("b2_moegather", {"sharding_profile": "serve_ep",
+                          "moe_impl": "gather", "moe_ranking": "sort"}),
+        ("b3_cachebatch", {"sharding_profile": "serve_ep",
+                           "moe_impl": "gather", "moe_ranking": "sort",
+                           "cache_layout": "batch"}),
+        ("b4_shard", {"sharding_profile": "fsdp_noexp",
+                      "moe_impl": "shard"}),
+    ],
+    ("hymba-1.5b", "prefill_32k"): [
+        ("c1_banded", {"swa_impl": "banded"}),
+        ("c2_logitsbf16", {"swa_impl": "banded",
+                           "logits_dtype": "bfloat16"}),
+        ("c3_chunk32", {"swa_impl": "banded", "logits_dtype": "bfloat16",
+                        "chunk_len": 32}),
+    ],
+}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    help="'arch:shape' or 'all'")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    outdir = os.path.join(args.out, "single")
+    os.makedirs(outdir, exist_ok=True)
+
+    for (arch, shape), chain in CHAINS.items():
+        if args.cell != "all" and args.cell != f"{arch}:{shape}":
+            continue
+        for tag, spec in chain:
+            fn = os.path.join(outdir, f"{arch}__{shape}__{tag}.json")
+            if os.path.exists(fn):
+                print(f"skip {tag} (exists)")
+                continue
+            print(f"=== {arch} {shape} [{tag}] spec={spec}", flush=True)
+            t0 = time.perf_counter()
+            try:
+                res = run_cell(arch, shape, "single", mesh, spec,
+                               OptConfig(), surrogate=True)
+                res["wall_s"] = time.perf_counter() - t0
+                res["tag"] = tag
+                with open(fn, "w") as f:
+                    json.dump(res, f, indent=1)
+                rf = res["roofline"]
+                print(f"  compute={rf['compute_s']:.4f}s "
+                      f"memory={rf['memory_s']:.4f}s "
+                      f"collective={rf['collective_s']:.4f}s "
+                      f"dominant={rf['dominant']} "
+                      f"useful={rf['useful_flops_ratio']:.3f} "
+                      f"temp={res['full']['memory'].get('temp_size_in_bytes', 0)/2**30:.1f}GiB",
+                      flush=True)
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                print(f"  FAILED {tag}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Serving driver: batched decode with online specialization + workload
+adaptation (the paper's TAS/FastClick scenario on an LM).
+
+Run:
+    PYTHONPATH=src python -m repro.launch.serve --steps 300
+
+The server decodes token batches against a KV cache; the Iridescent policy
+explores decode spec points (cache dtype, chunk length for recurrent archs)
+guided by measured tokens/s and re-explores when the request distribution
+shifts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
+                        IridescentRuntime)
+from repro.models import transformer as model
+from repro.models.transformer import RunOptions
+from repro.training import make_decode_builder
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--dwell", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch).replace(compute_dtype="float32")
+    rt = IridescentRuntime(async_compile=True)
+    handler = rt.register(
+        "serve_step", make_decode_builder(cfg, kernel_impl="xla"),
+        donate_argnums=1)
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    cache = model.init_cache(cfg, args.batch, args.max_len,
+                             RunOptions(decode_cache_dtype="float32"))
+    tokens = jnp.zeros((args.batch,), jnp.int32)
+
+    labels = ["cache_dtype"] + (
+        ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
+    explorer = Explorer(
+        handler,
+        ExhaustiveSweep.from_space(handler.spec_space(), labels),
+        dwell=args.dwell, change_detector=ChangeDetector(0.3),
+        wait_compiles=False)
+
+    t0 = time.perf_counter()
+    done = 0
+    for step in range(args.steps):
+        pos = jnp.int32(step % args.max_len)
+        logits, cache = handler(params, cache, tokens, pos)
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+        explorer.step()
+        done += args.batch
+        if (step + 1) % 40 == 0:
+            dt = time.perf_counter() - t0
+            print(f"step {step + 1:4d} tok/s={done / dt:,.0f} "
+                  f"config={handler.active_config()}")
+    print(f"served {done} tokens; variants: {len(handler.variants())}")
+    best, metric = explorer.policy.best()
+    print(f"best config: {best}")
+    rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""End-to-end training driver with online specialization.
+
+The *fixed code* of the paper's architecture (Fig 1): owns the processing
+loop, data pipeline, checkpointing, and the specialization policy; the
+train step is the Iridescent handler it obtains from the runtime.
+
+Run (CPU example, ~25M params):
+    PYTHONPATH=src python -m repro.launch.train --steps 120 --explore
+
+Features exercised: online exploration of (remat, microbatch, logits
+layout) guided by measured tokens/s; async variant compilation off the
+critical path; checkpoint/restart (resume with the same command — the data
+stream and optimizer state restore exactly); straggler/degradation
+detection through the ChangeDetector.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core import (ChangeDetector, CoordinateDescent, Explorer,
+                        IridescentRuntime)
+from repro.data import SyntheticLM
+from repro.models import ModelConfig
+from repro.models import transformer as model
+from repro.optim import OptConfig, init_opt_state
+from repro.training import make_train_builder
+
+
+def small_lm(scale: str) -> ModelConfig:
+    base = dict(family="dense", n_kv_heads=2, vocab_size=8192,
+                compute_dtype="float32")
+    sizes = {
+        "2m": dict(n_layers=4, d_model=128, n_heads=4, d_ff=512),
+        "25m": dict(n_layers=8, d_model=384, n_heads=6, d_ff=1536),
+        "100m": dict(n_layers=12, d_model=640, n_heads=10, d_ff=2560,
+                     vocab_size=16384),
+    }
+    return ModelConfig(name=f"lm-{scale}", **base, **sizes[scale])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="assigned arch id (reduced config); default: small LM")
+    ap.add_argument("--size", default="2m", choices=("2m", "25m", "100m"))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--explore", action="store_true",
+                    help="enable online specialization search")
+    ap.add_argument("--dwell", type=int, default=5)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress", default="none", choices=("none", "int8_ef"))
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced(args.arch).replace(compute_dtype="float32")
+           if args.arch else small_lm(args.size))
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps,
+                        compress=args.compress)
+    print(f"model={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"tokens/step={args.batch * args.seq}")
+
+    rt = IridescentRuntime(async_compile=True)
+    handler = rt.register("train_step",
+                          make_train_builder(cfg, opt_cfg, kernel_impl="xla"),
+                          donate_argnums=0)
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    start_step = 0
+    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    if mgr and mgr.latest_step() is not None:
+        state, meta = mgr.restore(state)
+        start_step = meta["step"]
+        print(f"resumed from step {start_step}")
+
+    ds = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=1,
+                     start_step=start_step)
+    it = iter(ds)
+
+    explorer = None
+    if args.explore:
+        space = handler.spec_space()
+        policy = CoordinateDescent(
+            space, labels=["remat", "microbatch", "logits_dtype"],
+            max_passes=1)
+        explorer = Explorer(handler, policy, dwell=args.dwell,
+                            metric_fn=lambda: handler.tput.read(),
+                            change_detector=ChangeDetector(0.3),
+                            wait_compiles=False)
+
+    t0 = time.perf_counter()
+    for step in range(start_step, args.steps):
+        batch = next(it)
+        state, metrics = handler(state, batch)
+        if explorer is not None:
+            explorer.step()
+        if (step + 1) % 10 == 0 or step == start_step:
+            dt = time.perf_counter() - t0
+            print(f"step {step + 1:4d} loss={float(metrics['loss']):.4f} "
+                  f"tok/s={(step + 1 - start_step) * args.batch * args.seq / dt:,.0f} "
+                  f"config={handler.active_config()}")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state)   # async, off critical path
+    if mgr:
+        mgr.wait()
+    print(f"done. variants compiled: {len(handler.variants())}; "
+          f"guard misses: {handler.guard_misses}")
+    if explorer is not None:
+        best, metric = explorer.policy.best()
+        print(f"best config: {best} ({metric:.2f} steps/s)")
+    rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.models.config import ModelConfig
+from repro.models.common import KernelOptions
+from repro.models.moe import MoEOptions
+from repro.models.transformer import (RunOptions, apply, cache_axes,
+                                      decode_step, init_cache, init_params,
+                                      param_axes)
+
+__all__ = ["ModelConfig", "KernelOptions", "MoEOptions", "RunOptions",
+           "apply", "cache_axes", "decode_step", "init_cache", "init_params",
+           "param_axes"]

@@ -1,0 +1,78 @@
+"""Shared model components: norms, rope, swiglu, initializers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import rmsnorm as rmsnorm_kernel
+
+__all__ = ["KernelOptions", "rms_norm", "rope", "apply_rope", "swiglu",
+           "dense_init", "embed_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOptions:
+    """Per-step kernel configuration — populated from Iridescent spec points.
+
+    These are the constants the specializer bakes into each variant: the
+    kernel implementation choice and the VMEM tile shapes (the paper's block
+    size ``B``, TPU edition).
+    """
+
+    impl: str | None = None          # xla | pallas | interpret (None = auto)
+    block_q: int = 512
+    block_kv: int = 512
+    norm_block_rows: int = 256
+    matmul_bm: int = 256
+    matmul_bn: int = 256
+    matmul_bk: int = 256
+    chunk_len: int = 64              # linear-attention chunk size (rwkv/ssm)
+    swa_impl: str = "full"           # full | banded (sliding-window band only)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             opts: KernelOptions | None = None) -> jnp.ndarray:
+    opts = opts or KernelOptions()
+    return rmsnorm_kernel.rmsnorm(x, weight, eps=eps,
+                                  block_rows=opts.norm_block_rows,
+                                  impl=opts.impl)
+
+
+def rope(positions: jnp.ndarray, dim: int, theta: float = 1e4,
+         dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotary embedding tables. positions (...,) -> cos/sin (..., dim/2)."""
+    assert dim % 2 == 0, dim
+    freqs = theta ** (-jnp.arange(0, dim // 2, dtype=jnp.float32) / (dim // 2))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, D) with cos/sin (S, D/2) (or broadcastable)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos.astype(x1.dtype)
+    sin = sin.astype(x1.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU FFN: silu(x@Wg) * (x@Wu) @ Wd, with TP-friendly sharding."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("batch", "seq", "ffn"))
+    return h @ w_down
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (fan_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,143 @@
+"""Mamba-style selective SSM heads (Hymba, arXiv:2411.13676; SSD form of
+Mamba-2).  Per head: scalar input-dependent decay ``a_t = exp(-softplus(dt))
+* exp(A_log)``-style gating, shared B/C projections (ssm_state = N), short
+causal depthwise conv on the input, skip term D.
+
+Train path: chunked linear attention (inclusive read), loop-free.
+Decode: O(1) state update; conv keeps a (K-1)-sample ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.linear_attention import linear_attention
+from repro.models.chunk_scan import step_linear_attention
+from repro.models.common import KernelOptions, dense_init
+from repro.models.config import ModelConfig
+
+__all__ = ["init_ssm", "ssm_axes", "apply_ssm", "init_ssm_cache",
+           "ssm_cache_axes", "decode_ssm", "LOG_A_MIN"]
+
+LOG_A_MIN = -1.0        # per-step log-decay clamp (fp32-safe chunking)
+_CONV_K = 4
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_heads * cfg.d_head
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, di)),
+        "conv": dense_init(ks[1], (_CONV_K, di)) * 0.5,
+        "w_b": dense_init(ks[2], (d, n)),
+        "w_c": dense_init(ks[3], (d, n)),
+        "w_dt": dense_init(ks[4], (d, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "skip_d": jnp.ones((h,), jnp.float32),
+        "w_out": dense_init(ks[5], (di, d)),
+    }
+
+
+def ssm_axes(cfg: ModelConfig) -> dict:
+    return {
+        "w_in": ("fsdp", "heads"), "conv": (None, "heads"),
+        "w_b": ("fsdp", "state"), "w_c": ("fsdp", "state"),
+        "w_dt": ("fsdp", None), "dt_bias": (None,), "a_log": (None,),
+        "skip_d": (None,), "w_out": ("heads", "fsdp"),
+    }
+
+
+def _conv_causal(xi: jnp.ndarray, kern: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv. xi (B,S,di), kern (K,di)."""
+    k = kern.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xi[:, : k - 1])
+    else:
+        pad = state.astype(xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)          # (B, S+K-1, di)
+    out = sum(xp[:, i:i + xi.shape[1]] * kern[i].astype(xi.dtype)
+              for i in range(k))
+    return out
+
+
+def _gates(p: dict, x: jnp.ndarray):
+    """x (B,S,d) -> B (B,S,N), C (B,S,N), dt (B,S,H), log_a (B,S,H)."""
+    cdt = x.dtype
+    bmat = x @ p["w_b"].astype(cdt)
+    cmat = x @ p["w_c"].astype(cdt)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"])
+    log_a = jnp.clip(-dt * jnp.exp(p["a_log"]), LOG_A_MIN, -1e-4)
+    return bmat, cmat, dt, log_a
+
+
+def apply_ssm(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+              opts: KernelOptions) -> jnp.ndarray:
+    """x (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    h, dh, n = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    cdt = x.dtype
+    xi = jax.nn.silu(_conv_causal(x @ p["w_in"].astype(cdt), p["conv"]))
+    bmat, cmat, dt, log_a = _gates(p, x)
+    xh = xi.reshape(b, s, h, dh)
+    v = xh * dt.astype(cdt)[..., None]               # dt-scaled input
+    # per (batch, head): q=C (S,N), k=B (S,N), v (S,dh), decay (S,1)
+    qb = jnp.broadcast_to(cmat[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    kb = jnp.broadcast_to(bmat[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    wb = log_a.transpose(0, 2, 1)[..., None].reshape(b * h, s, 1)
+    o = linear_attention(qb, kb, vb, wb, inclusive=True,
+                         chunk=min(opts.chunk_len, s), impl=opts.impl)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)  # (B,S,H,dh)
+    o = o + xh * p["skip_d"].astype(cdt)[None, None, :, None]
+    o = o.reshape(b, s, h * dh)
+    return constrain(o @ p["w_out"].astype(cdt), ("batch", "seq", None))
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+                   window=None, dtype=jnp.float32) -> dict:
+    h, dh, n = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, n, dh), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, _d_inner(cfg)), dtype),
+    }
+
+
+def ssm_cache_axes(cfg: ModelConfig) -> dict:
+    return {"state": ("batch", "heads", "state", None),
+            "conv": ("batch", None, "heads")}
+
+
+def decode_ssm(p: dict, cache: dict, x: jnp.ndarray, pos, cfg: ModelConfig,
+               opts: KernelOptions, **_) -> tuple[jnp.ndarray, dict]:
+    """One step. x (B,1,d) -> ((B,1,d), cache)."""
+    b, _, d = x.shape
+    h, dh, n = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    cdt = x.dtype
+    xin = x @ p["w_in"].astype(cdt)                   # (B,1,di)
+    xi = jax.nn.silu(_conv_causal(xin, p["conv"], cache["conv"]))[:, 0]
+    new_conv = jnp.concatenate([cache["conv"][:, 1:],
+                                xin.astype(cache["conv"].dtype)], axis=1)
+    bmat, cmat, dt, log_a = _gates(p, x)
+    bmat, cmat, dt, log_a = bmat[:, 0], cmat[:, 0], dt[:, 0], log_a[:, 0]
+    xh = xi.reshape(b, h, dh)
+    v = xh * dt.astype(cdt)[..., None]
+
+    def step(q_, k_, v_, w_, s_):
+        return step_linear_attention(q_, k_, v_, w_, s_, inclusive=True)
+
+    fn = jax.vmap(jax.vmap(step, in_axes=(None, None, 0, 0, 0)),
+                  in_axes=(0, 0, 0, 0, 0))
+    o, new_state = fn(cmat, bmat, v, log_a[..., None], cache["state"])
+    o = o + xh * p["skip_d"].astype(cdt)[None, :, None]
+    y = (o.reshape(b, h * dh) @ p["w_out"].astype(cdt))[:, None]
+    return y, {"state": new_state, "conv": new_conv}

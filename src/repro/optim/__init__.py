@@ -1,0 +1,5 @@
+from repro.optim.adamw import (OptConfig, apply_updates, cosine_lr,
+                               init_opt_state, opt_state_axes)
+
+__all__ = ["OptConfig", "apply_updates", "cosine_lr", "init_opt_state",
+           "opt_state_axes"]

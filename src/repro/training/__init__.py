@@ -1,0 +1,7 @@
+from repro.training.steps import (SHARDING_PROFILES, cross_entropy,
+                                  make_decode_builder, make_prefill_builder,
+                                  make_train_builder, run_options_from_spec)
+
+__all__ = ["SHARDING_PROFILES", "cross_entropy", "make_decode_builder",
+           "make_prefill_builder", "make_train_builder",
+           "run_options_from_spec"]

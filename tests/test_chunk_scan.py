@@ -1,0 +1,78 @@
+"""Chunked linear recurrence vs per-step oracle (property-based)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.chunk_scan import (chunked_linear_attention,
+                                     naive_linear_attention,
+                                     step_linear_attention)
+
+RS = np.random.RandomState(1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([16, 32, 64, 128]),       # T
+    st.sampled_from([4, 8, 16]),              # chunk
+    st.sampled_from([4, 8]),                  # dk
+    st.sampled_from([4, 12]),                 # dv
+    st.booleans(),                            # inclusive
+    st.booleans(),                            # bonus
+    st.booleans(),                            # scalar decay
+)
+def test_property_chunked_equals_naive(t, c, dk, dv, inclusive, use_bonus,
+                                       scalar_decay):
+    if c > t:
+        c = t
+    if inclusive:
+        use_bonus = False
+    q = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    k = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    v = jnp.asarray(RS.randn(t, dv).astype(np.float32))
+    lw_shape = (t, 1) if scalar_decay else (t, dk)
+    lw = jnp.asarray(-np.clip(RS.rand(*lw_shape), 1e-4, 1.0)
+                     .astype(np.float32))
+    bonus = jnp.asarray(RS.randn(dk).astype(np.float32)) if use_bonus else None
+    s0 = jnp.asarray(RS.randn(dk, dv).astype(np.float32) * 0.1)
+
+    o1, f1 = chunked_linear_attention(q, k, v, lw, bonus=bonus,
+                                      inclusive=inclusive, chunk=c,
+                                      init_state=s0, return_state=True)
+    o2, f2 = naive_linear_attention(q, k, v, lw, bonus=bonus,
+                                    inclusive=inclusive, init_state=s0,
+                                    return_state=True)
+    np.testing.assert_allclose(o1, o2, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(f1, f2, rtol=5e-4, atol=5e-4)
+
+
+def test_step_chain_matches_naive():
+    t, dk, dv = 12, 6, 5
+    q = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    k = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    v = jnp.asarray(RS.randn(t, dv).astype(np.float32))
+    lw = jnp.asarray(-np.clip(RS.rand(t, dk), 1e-4, 1.0).astype(np.float32))
+    u = jnp.asarray(RS.randn(dk).astype(np.float32))
+    S = jnp.zeros((dk, dv), jnp.float32)
+    outs = []
+    for i in range(t):
+        o, S = step_linear_attention(q[i], k[i], v[i], lw[i], S, bonus=u)
+        outs.append(o)
+    ref = naive_linear_attention(q, k, v, lw, bonus=u)
+    np.testing.assert_allclose(jnp.stack(outs), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_state_chaining_across_calls():
+    """Splitting a sequence across two chunked calls == one call."""
+    t, dk, dv, c = 64, 8, 8, 8
+    q = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    k = jnp.asarray(RS.randn(t, dk).astype(np.float32))
+    v = jnp.asarray(RS.randn(t, dv).astype(np.float32))
+    lw = jnp.asarray(-np.clip(RS.rand(t, dk), 1e-4, 1.0).astype(np.float32))
+    o_full = chunked_linear_attention(q, k, v, lw, chunk=c, inclusive=True)
+    h = t // 2
+    o1, s = chunked_linear_attention(q[:h], k[:h], v[:h], lw[:h], chunk=c,
+                                     inclusive=True, return_state=True)
+    o2 = chunked_linear_attention(q[h:], k[h:], v[h:], lw[h:], chunk=c,
+                                  inclusive=True, init_state=s)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2]), o_full,
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,96 @@
+"""Policies + explorer lifecycle."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ChangeDetector, CoordinateDescent, EpsilonGreedy,
+                        ExhaustiveSweep, SuccessiveHalving)
+from repro.core.points import EnumPoint, SpecSpace
+
+
+def _space(axes: dict) -> SpecSpace:
+    s = SpecSpace()
+    for label, choices in axes.items():
+        s.register(EnumPoint(label, choices[0], choices=tuple(choices)))
+    return s
+
+
+def _drive(policy, metric_fn):
+    while True:
+        cfg = policy.propose()
+        if cfg is None:
+            return policy.best()
+        policy.observe(cfg, metric_fn(cfg))
+
+
+def test_exhaustive_finds_argmax():
+    space = _space({"b": (1, 2, 4, 8)})
+    pol = ExhaustiveSweep.from_space(space, labels=["b"])
+    best, metric = _drive(pol, lambda c: -abs(c["b"] - 4))
+    assert best["b"] == 4 and metric == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=6, unique=True))
+def test_property_exhaustive_optimal(vals):
+    space = _space({"x": tuple(vals)})
+    pol = ExhaustiveSweep.from_space(space, labels=["x"])
+    best, _ = _drive(pol, lambda c: float(c["x"]))
+    assert best["x"] == max(vals)
+
+
+def test_coordinate_descent_separable():
+    space = _space({"a": (0, 1, 2, 3), "b": (0, 1, 2, 3), "c": (0, 1, 2)})
+    pol = CoordinateDescent(space)
+    best, _ = _drive(pol, lambda c: -((c.get("a") or 0) - 2) ** 2
+                     - ((c.get("b") or 0) - 3) ** 2
+                     - ((c.get("c") or 0) - 1) ** 2)
+    assert (best["a"], best["b"], best["c"]) == (2, 3, 1)
+
+
+def test_coordinate_descent_cheaper_than_exhaustive():
+    space = _space({"a": tuple(range(8)), "b": tuple(range(8)),
+                    "c": tuple(range(8))})
+    pol = CoordinateDescent(space)
+    evals = 0
+    while True:
+        cfg = pol.propose()
+        if cfg is None:
+            break
+        evals += 1
+        pol.observe(cfg, -(cfg.get("a") or 0))
+    assert evals < 8 ** 3 / 4   # far below the 512-config product space
+
+
+def test_epsilon_greedy_exploits():
+    space = _space({"x": (1, 2, 3)})
+    pol = EpsilonGreedy(space.configs(labels=["x"]), eps=0.0, seed=1)
+    for _ in range(10):
+        cfg = pol.propose()
+        pol.observe(cfg, float(cfg["x"] == 2))
+    assert pol.best()[0]["x"] == 2
+    assert pol.propose()["x"] == 2   # pure exploitation now
+
+
+def test_successive_halving_converges():
+    cands = [{"x": i} for i in range(8)]
+    pol = SuccessiveHalving(cands)
+    best, _ = _drive(pol, lambda c: float(c["x"]))
+    assert best["x"] == 7
+
+
+def test_change_detector():
+    cd = ChangeDetector(threshold=0.25, warmup=2)
+    for _ in range(8):
+        assert not cd.update(100.0)
+    assert cd.update(10.0)        # -90% -> change
+    for _ in range(8):
+        assert not cd.update(10.0)   # re-baselined
+    assert cd.update(20.0)        # +100% -> change
+
+
+def test_change_detector_ignores_noise():
+    cd = ChangeDetector(threshold=0.25, warmup=2)
+    vals = [100, 102, 98, 101, 99, 103, 97, 100]
+    assert not any(cd.update(v) for v in vals)

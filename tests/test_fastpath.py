@@ -1,0 +1,57 @@
+"""Fast-path specialization (Morpheus analog): correctness property —
+fastpath(x) == generic(x) for ALL x (hits and misses)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fastpath import FastPathTable, build_table, make_fastpath
+from repro.core.instrumentation import HostRecorder
+
+
+def _generic(xb):
+    xb = jnp.atleast_2d(xb)
+    return (xb.astype(jnp.float32) ** 2).sum(-1, keepdims=True) + 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 50), st.integers(0, 50)),
+             min_size=1, max_size=8, unique=True),
+    st.lists(st.tuples(st.integers(0, 50), st.integers(0, 50)),
+             min_size=1, max_size=16),
+    st.booleans(),
+)
+def test_property_fastpath_equals_generic(table_keys, queries, skip):
+    keys = np.asarray(table_keys, np.int32)
+    vals = np.asarray(_generic(jnp.asarray(keys)))
+    fp = make_fastpath(_generic, FastPathTable.from_arrays(keys, vals),
+                       skip_generic_when_all_hit=skip)
+    q = jnp.asarray(np.asarray(queries, np.int32))
+    np.testing.assert_allclose(fp(q), _generic(q), rtol=1e-6)
+
+
+def test_scalar_input_shape():
+    keys = np.array([[1, 2]], np.int32)
+    vals = np.asarray(_generic(jnp.asarray(keys)))
+    fp = make_fastpath(_generic, FastPathTable.from_arrays(keys, vals))
+    out = fp(jnp.array([1, 2], jnp.int32))
+    assert out.shape == (1,)
+
+
+def test_build_table_from_instrumentation():
+    rec = HostRecorder("key", lambda a, k: int(a[0]), rate=1.0)
+    for v in [5, 5, 5, 3, 3, 9]:
+        rec.maybe_record((v,), {})
+    observed = {"key": rec.summary()}
+
+    def gen(k):
+        return np.asarray(k, np.float64) * 2.0
+
+    table = build_table(observed, "key", n=2, generic_fn=gen)
+    assert table.n == 2
+    top_keys = {int(np.asarray(k)[0]) for k in table.keys}
+    assert top_keys == {5, 3}
+
+
+def test_table_none_when_no_data():
+    assert build_table({}, "key", 4, lambda k: k) is None

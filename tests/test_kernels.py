@@ -1,0 +1,164 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention, fastpath, matmul, rmsnorm
+
+RS = np.random.RandomState(0)
+
+
+def _rand(shape, dtype):
+    x = RS.randn(*shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+# -- matmul ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 96, 48), (128, 64, 128),
+                                   (96, 72, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes(m, k, n, dtype):
+    x, y = _rand((m, k), dtype), _rand((k, n), dtype)
+    ref = matmul.matmul(x, y, impl="xla")
+    out = matmul.matmul(x, y, bm=32, bn=16, bk=8, impl="interpret")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 64, 32), (64, 32, 8)])
+def test_matmul_block_sweep(bm, bn, bk):
+    x, y = _rand((64, 64), jnp.float32), _rand((64, 64), jnp.float32)
+    ref = matmul.matmul(x, y, impl="xla")
+    out = matmul.matmul(x, y, bm=bm, bn=bn, bk=bk, impl="interpret",
+                        assume_divisible=True)
+    np.testing.assert_allclose(ref, out, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_padding_guard():
+    # shapes NOT divisible by blocks: wrapper pads & crops
+    x, y = _rand((50, 30), jnp.float32), _rand((30, 70), jnp.float32)
+    ref = matmul.matmul(x, y, impl="xla")
+    out = matmul.matmul(x, y, bm=16, bn=16, bk=16, impl="interpret")
+    np.testing.assert_allclose(ref, out, rtol=1e-5, atol=1e-5)
+
+
+# -- attention ------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,hk", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, None)])
+def test_attention_gqa_masks(h, hk, causal, window):
+    B, S, D = 2, 64, 32
+    q = _rand((B, h, S, D), jnp.float32)
+    k = _rand((B, hk, S, D), jnp.float32)
+    v = _rand((B, hk, S, D), jnp.float32)
+    ref = attention.attention(q, k, v, causal=causal, window=window,
+                              impl="xla")
+    out = attention.attention(q, k, v, causal=causal, window=window,
+                              block_q=16, block_kv=16, impl="interpret")
+    np.testing.assert_allclose(ref, out, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_dv_neq_dq():
+    B, H, S = 2, 2, 32
+    q = _rand((B, H, S, 24), jnp.float32)
+    k = _rand((B, H, S, 24), jnp.float32)
+    v = _rand((B, H, S, 16), jnp.float32)      # MLA-style narrower v
+    ref = attention.attention(q, k, v, impl="xla")
+    out = attention.attention(q, k, v, block_q=16, block_kv=16,
+                              impl="interpret")
+    assert out.shape == (B, H, S, 16)
+    np.testing.assert_allclose(ref, out, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_q_offset_continuation():
+    B, H, S, D = 1, 2, 64, 16
+    q = _rand((B, H, 16, D), jnp.float32)     # last 16 queries of 64
+    k = _rand((B, H, S, D), jnp.float32)
+    v = _rand((B, H, S, D), jnp.float32)
+    ref = attention.attention(q, k, v, causal=True, impl="xla")
+    out = attention.attention(q, k, v, causal=True, block_q=16, block_kv=16,
+                              impl="interpret")
+    np.testing.assert_allclose(ref, out, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_dtypes(dtype):
+    B, H, S, D = 1, 2, 32, 16
+    q, k, v = (_rand((B, H, S, D), dtype) for _ in range(3))
+    ref = attention.attention(q, k, v, impl="xla")
+    out = attention.attention(q, k, v, block_q=16, block_kv=16,
+                              impl="interpret")
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# -- rmsnorm --------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,d", [(32, 128), (100, 64), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = _rand((rows, d), dtype)
+    w = _rand((d,), jnp.float32)
+    ref = rmsnorm.rmsnorm(x, w, impl="xla")
+    out = rmsnorm.rmsnorm(x, w, impl="interpret", block_rows=32)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_nd_batch():
+    x = _rand((2, 17, 64), jnp.float32)
+    w = _rand((64,), jnp.float32)
+    ref = rmsnorm.rmsnorm(x, w, impl="xla")
+    out = rmsnorm.rmsnorm(x, w, impl="interpret", block_rows=16)
+    np.testing.assert_allclose(ref, out, rtol=1e-5, atol=1e-5)
+
+
+# -- fastpath lookup ---------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n,kk,v", [(64, 8, 3, 16), (100, 4, 1, 8),
+                                      (256, 32, 2, 4)])
+def test_fastpath_lookup_sweep(b, n, kk, v):
+    x = jnp.asarray(RS.randint(0, 10, (b, kk)).astype(np.int32))
+    keys = jnp.asarray(RS.randint(0, 10, (n, kk)).astype(np.int32))
+    vals = _rand((n, v), jnp.float32)
+    o_ref, h_ref = fastpath.lookup(x, keys, vals, impl="xla")
+    o, h = fastpath.lookup(x, keys, vals, impl="interpret", block_b=32)
+    np.testing.assert_allclose(o_ref, o, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(h_ref, h)
+
+
+# -- banded sliding-window attention (beyond-paper optimization) -----------------
+
+@pytest.mark.parametrize("s,w", [(64, 16), (128, 32), (96, 32)])
+@pytest.mark.parametrize("group", [1, 2])
+def test_banded_equals_masked_full(s, w, group):
+    from repro.kernels.attention import ref
+    B, H, D = 2, 4, 16
+    hk = H // group
+    q = _rand((B, H, s, D), jnp.float32)
+    k = _rand((B, hk, s, D), jnp.float32)
+    v = _rand((B, hk, s, D), jnp.float32)
+    full = ref.attention(q, k, v, causal=True, window=w)
+    band = ref.banded_attention(q, k, v, window=w)
+    np.testing.assert_allclose(full, band, rtol=2e-5, atol=2e-5)
+
+
+def test_banded_routing_through_ops():
+    B, H, S, D, W = 1, 2, 64, 16, 16
+    q = _rand((B, H, S, D), jnp.float32)
+    k = _rand((B, H, S, D), jnp.float32)
+    v = _rand((B, H, S, D), jnp.float32)
+    a = attention.attention(q, k, v, causal=True, window=W, impl="xla",
+                            swa_impl="banded")
+    b = attention.attention(q, k, v, causal=True, window=W, impl="xla",
+                            swa_impl="full")
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,45 @@
+"""Chunked linear-attention Pallas kernel (interpret mode) vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.linear_attention import linear_attention
+
+RS = np.random.RandomState(2)
+
+
+def _mk(bh, t, dk, dv, scalar_decay=False):
+    q = jnp.asarray(RS.randn(bh, t, dk).astype(np.float32))
+    k = jnp.asarray(RS.randn(bh, t, dk).astype(np.float32))
+    v = jnp.asarray(RS.randn(bh, t, dv).astype(np.float32))
+    shape = (bh, t, 1) if scalar_decay else (bh, t, dk)
+    lw = jnp.asarray(-np.clip(RS.rand(*shape), 1e-4, 1.0).astype(np.float32))
+    return q, k, v, lw
+
+
+@pytest.mark.parametrize("t,chunk", [(32, 8), (64, 16), (64, 64)])
+@pytest.mark.parametrize("dk,dv", [(8, 8), (8, 16)])
+@pytest.mark.parametrize("inclusive", [False, True])
+def test_kernel_matches_oracle(t, chunk, dk, dv, inclusive):
+    q, k, v, lw = _mk(2, t, dk, dv)
+    a = linear_attention(q, k, v, lw, inclusive=inclusive, chunk=chunk,
+                         impl="xla")
+    b = linear_attention(q, k, v, lw, inclusive=inclusive, chunk=chunk,
+                         impl="interpret")
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_kernel_with_bonus_rwkv_mode():
+    q, k, v, lw = _mk(3, 64, 8, 8)
+    u = jnp.asarray(RS.randn(3, 8).astype(np.float32))
+    a = linear_attention(q, k, v, lw, bonus=u, chunk=16, impl="xla")
+    b = linear_attention(q, k, v, lw, bonus=u, chunk=16, impl="interpret")
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_kernel_scalar_decay_ssm_mode():
+    q, k, v, lw = _mk(2, 32, 8, 12, scalar_decay=True)
+    a = linear_attention(q, k, v, lw, inclusive=True, chunk=8, impl="xla")
+    b = linear_attention(q, k, v, lw, inclusive=True, chunk=8,
+                         impl="interpret")
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)

@@ -1,0 +1,81 @@
+"""MoE dispatch implementations: agreement, capacity semantics, rankings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.models.moe import (MoEOptions, _capacity, apply_moe,
+                              assign_experts, init_moe)
+
+CFG = ModelConfig(name="t", family="moe", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=100, n_experts=8,
+                  top_k=2, moe_d_ff=48, n_shared_experts=2)
+P = init_moe(jax.random.PRNGKey(0), CFG)
+X = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32), jnp.float32)
+
+
+def test_impls_agree_with_dense_oracle_when_unbounded():
+    o_dense, aux_d = apply_moe(P, X, CFG, MoEOptions(impl="dense"))
+    for impl in ("gather", "einsum"):
+        for ranking in ("cumsum", "sort"):
+            o, aux = apply_moe(P, X, CFG, MoEOptions(
+                impl=impl, capacity_factor=100.0, ranking=ranking))
+            np.testing.assert_allclose(o, o_dense, rtol=2e-5, atol=2e-5)
+            np.testing.assert_allclose(aux, aux_d, rtol=1e-5)
+
+
+@pytest.mark.parametrize("group_size", [0, 16])
+@pytest.mark.parametrize("cf", [1.0, 2.0])
+def test_gather_equals_einsum_under_drops(group_size, cf):
+    o_g, _ = apply_moe(P, X, CFG, MoEOptions(
+        impl="gather", capacity_factor=cf, group_size=group_size))
+    o_e, _ = apply_moe(P, X, CFG, MoEOptions(
+        impl="einsum", capacity_factor=cf, group_size=group_size))
+    np.testing.assert_allclose(o_g, o_e, rtol=2e-5, atol=2e-5)
+
+
+def test_sort_ranking_equals_cumsum():
+    for gs in (0, 16):
+        a = assign_experts(jax.random.normal(jax.random.PRNGKey(2), (64, 8)),
+                           2, 8, 16, gs, "cumsum")
+        b = assign_experts(jax.random.normal(jax.random.PRNGKey(2), (64, 8)),
+                           2, 8, 16, gs, "sort")
+        np.testing.assert_array_equal(a["pos"], b["pos"])
+        np.testing.assert_array_equal(a["keep"], b["keep"])
+
+
+def test_capacity_drops_tokens():
+    logits = jnp.zeros((64, 8))                     # all route to expert 0/1
+    a = assign_experts(logits, 2, 8, capacity=16)
+    assert int(a["keep"].sum()) <= 2 * 16 * 8       # bounded by capacity*E
+    assert not bool(a["keep"].all())                # some dropped
+
+
+def test_positions_are_dense_rank():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (32, 8))
+    a = assign_experts(logits, 2, 8, capacity=1000)
+    # for each expert, the set of positions is exactly {0..count-1}
+    idx = np.asarray(a["idx"]).reshape(-1)
+    pos = np.asarray(a["pos"]).reshape(-1)
+    for e in range(8):
+        ps = np.sort(pos[idx == e])
+        np.testing.assert_array_equal(ps, np.arange(len(ps)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1.0, 1.25, 2.0]))
+def test_property_moe_output_finite(seed, cf):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2**30), (1, 16, 32))
+    o, aux = apply_moe(P, x, CFG, MoEOptions(impl="gather",
+                                             capacity_factor=cf,
+                                             ranking="sort"))
+    assert bool(jnp.isfinite(o).all())
+    assert bool(jnp.isfinite(aux))
+
+
+def test_capacity_rounding_shardable():
+    assert _capacity(1_000_000, 8, 384, 1.25) % 512 == 0
+    assert _capacity(128, 8, 384, 1.25) % 16 == 0
+    assert _capacity(1, 1, 1, 1.0) >= 1

@@ -1,0 +1,70 @@
+"""Logical-axis sharding rules (pure logic; mesh-full tests live in
+test_distributed_small.py which spawns an 8-device subprocess)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import DEFAULT_RULES, ShardingRules, logical_to_spec
+from repro.training.steps import SHARDING_PROFILES
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    # abstract mesh over the single CPU device: use jax.sharding.Mesh with
+    # reshaped devices is impossible with 1 device -> use AbstractMesh.
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_rules_make_and_replace():
+    r = ShardingRules.make({"a": "x", "b": ("x", "y"), "c": None})
+    assert r.get("a") == ("x",)
+    assert r.get("b") == ("x", "y")
+    assert r.get("c") is None
+    r2 = r.replace(a=None, c="y")
+    assert r2.get("a") is None and r2.get("c") == ("y",)
+    with pytest.raises(KeyError):
+        r.get("missing")
+
+
+def test_logical_to_spec_basic():
+    m = _mesh()
+    spec = logical_to_spec(("batch", None, "ffn"), (8, 3, 4), m,
+                           DEFAULT_RULES)
+    assert spec == P("data", None, "model")
+
+
+def test_divisibility_degrades_to_replicated():
+    m = _mesh()
+    # dim 3 not divisible by model axis (2) -> replicated
+    spec = logical_to_spec(("batch", "ffn"), (8, 3), m, DEFAULT_RULES)
+    assert spec == P("data")
+
+
+def test_missing_mesh_axis_is_dropped():
+    m = _mesh()  # no 'pod' axis
+    spec = logical_to_spec(("batch",), (8,), m, DEFAULT_RULES)
+    assert spec == P("data")   # ('pod','data') filtered to ('data',)
+
+
+def test_multi_axis_mapping():
+    m = _mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = logical_to_spec(("batch", "ffn"), (8, 8), m, DEFAULT_RULES)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_profiles_are_distinct():
+    specs = {}
+    m = _mesh((2, 2, 2), ("pod", "data", "model"))
+    for name, fn in SHARDING_PROFILES.items():
+        rules = fn(DEFAULT_RULES)
+        specs[name] = (rules.get("fsdp"), rules.get("seq"))
+    assert specs["dp"][0] is None
+    assert specs["fsdp"][0] == ("data",)
+    assert specs["fsdp_pods"][0] == ("pod", "data")
+    assert specs["seq"][1] == ("model",)
+
+
+def test_trailing_nones_trimmed():
+    m = _mesh()
+    spec = logical_to_spec(("batch", None, None), (8, 2, 2), m,
+                           DEFAULT_RULES)
+    assert spec == P("data")

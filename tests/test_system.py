@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests for the paper's system: the full Iridescent
+loop (declare space -> explore online -> exploit -> adapt) driving real
+jitted handlers, plus guard-corrected serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
+                        IridescentRuntime, Phase, guards)
+from repro.core.fastpath import build_table, make_fastpath
+
+
+def test_full_loop_converges_and_adapts():
+    """The paper's Fig 2/7 scenario in miniature: a handler whose optimal
+    configuration depends on the workload; the explorer finds the optimum,
+    then re-explores after a workload change."""
+    rt = IridescentRuntime(async_compile=False)
+
+    def build(spec):
+        b = spec.enum("B", 1, (1, 4))
+
+        def handler(x):
+            return (x * b).sum()
+
+        return handler
+
+    h = rt.register("h", build)
+    h(jnp.ones(8))
+
+    # synthetic metric: config B=4 is 3x "faster" in workload phase 0,
+    # B=1 wins in phase 1 (emulates Table 1's hw/workload dependence).
+    phase = {"v": 0}
+
+    def metric():
+        b = h.active_config().get("B", 1)
+        speed = {0: {1: 1.0, 4: 3.0}, 1: {1: 5.0, 4: 0.5}}
+        return speed[phase["v"]].get(b if b else 1, 1.0)
+
+    ex = Explorer(h, ExhaustiveSweep.from_space(h.spec_space(), ["B"]),
+                  dwell=3, metric_fn=metric,
+                  change_detector=ChangeDetector(0.25, warmup=0))
+    for _ in range(40):
+        h(jnp.ones(8))
+        ex.step()
+    assert ex.phase is Phase.EXPLOIT
+    assert h.active_config()["B"] == 4
+
+    phase["v"] = 1   # workload change -> metric drops -> re-explore
+    for _ in range(80):
+        h(jnp.ones(8))
+        ex.step()
+    assert ex.explorations >= 1
+    assert h.active_config()["B"] == 1
+
+
+def test_guarded_specialization_serving():
+    """Fast-path-specialized lookup handler stays correct on misses and the
+    policy can read the instrumentation statistics (paper §5 two phases)."""
+    rt = IridescentRuntime(async_compile=False)
+
+    def generic(xb):
+        xb = jnp.atleast_2d(xb)
+        return (xb.astype(jnp.float32) * 2 + 1).sum(-1, keepdims=True)
+
+    rt.add_custom_spec(
+        "fastpath",
+        lambda payload: make_fastpath(
+            generic, payload, skip_generic_when_all_hit=True))
+
+    def build(spec):
+        fp = spec.custom("hot", "fastpath")
+        return fp if fp is not None else generic
+
+    h = rt.register("lookup", build)
+    x = jnp.asarray(np.array([[3], [9], [40]], np.int64))
+    expect = np.asarray(generic(x))
+    np.testing.assert_allclose(h(x), expect)
+
+    # instrumentation phase -> build table -> specialize (paper §5 phases)
+    h.enable_instrumentation(rate=1.0, collectors={
+        "hot": lambda a, k: int(np.asarray(a[0])[0, 0])})
+    for _ in range(5):
+        h(x)
+    tbl = build_table(h.spec_space().observed, "hot", n=2,
+                      generic_fn=generic)
+    assert tbl is not None
+    h.disable_instrumentation()
+    h.specialize({"hot": tbl}, wait=True)
+    np.testing.assert_allclose(h(x), expect)       # hits + misses both right
+
+
+def test_checkpoint_restart_training(tmp_path):
+    """Fault tolerance: kill/restart mid-training resumes identically."""
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.core.specializer import specialize_builder
+    from repro.data import SyntheticLM
+    from repro.models import transformer as model
+    from repro.optim import OptConfig, init_opt_state
+    from repro.training import make_train_builder
+
+    cfg = configs.get_reduced("qwen3-0.6b").replace(compute_dtype="float32")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(specialize_builder(
+        make_train_builder(cfg, opt_cfg, kernel_impl="xla"), {}).fn)
+    ds = SyntheticLM(cfg.vocab_size, batch=2, seq_len=16, seed=1, prefetch=0)
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+
+    for i in range(4):
+        state, _ = step(state, ds.batch_at(i))
+    mgr.save(4, state, extra_meta={"data_step": 4}, block=True)
+    for i in range(4, 6):
+        state, m = step(state, ds.batch_at(i))
+    loss_direct = float(m["loss"])
+
+    # "crash" -> restore -> replay
+    restored, meta = mgr.restore(state)
+    st2 = restored
+    for i in range(meta["data_step"], 6):
+        st2, m2 = step(st2, ds.batch_at(i))
+    assert abs(float(m2["loss"]) - loss_direct) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                    jax.tree_util.tree_leaves(st2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
