@@ -1,0 +1,225 @@
+"""jax API compatibility layer — the single absorption point for version drift.
+
+Policy (see README "Compat policy"): any jax symbol that has moved, been
+renamed, or gained/lost keyword arguments across the jax versions we target
+is imported **only** here, behind a feature probe, and re-exported under one
+stable name.  The rest of the codebase imports from ``repro.compat`` and
+never touches ``jax.experimental`` churn directly.  When the next jax
+release moves something, one file changes.
+
+Currently absorbed drift:
+
+* ``shard_map`` — lived at ``jax.experimental.shard_map.shard_map``, is
+  being promoted to ``jax.shard_map``; its replication-check kwarg was
+  renamed ``check_rep`` -> ``check_vma``.  :func:`shard_map` accepts either
+  spelling and forwards whichever the installed jax understands.
+* Pallas platform modules — ``jax.experimental.pallas`` and its ``tpu`` /
+  ``triton`` submodules are optional per build.  They are imported guarded;
+  availability predicates (:func:`has_pallas_tpu`, ...) let callers gate
+  backend-specific code instead of crashing at import time.
+* ``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams``;
+  :func:`tpu_compiler_params` builds whichever class exists and silently
+  drops fields the installed version does not know.
+* Tree utilities — ``jax.tree_util.tree_*`` vs the newer ``jax.tree.*``
+  namespace; stable names :func:`tree_map` etc. pick whichever exists.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = [
+    "jax_version",
+    "shard_map",
+    "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
+    "tree_structure",
+    "pallas", "pallas_tpu", "pallas_triton",
+    "has_pallas", "has_pallas_tpu", "has_pallas_triton",
+    "require_pallas", "require_pallas_tpu",
+    "backend", "on_cpu", "on_gpu", "on_tpu",
+    "tpu_compiler_params", "vmem",
+    "abstract_mesh", "cost_analysis",
+]
+
+
+def _version_tuple(v: str) -> tuple[int, ...]:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+#: installed jax version as a comparable tuple, e.g. (0, 4, 37)
+jax_version: tuple[int, ...] = _version_tuple(jax.__version__)
+
+
+# -- shard_map -------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6-ish
+    _shard_map = jax.shard_map
+else:                                               # pre-promotion location
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_KWARGS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any,
+              **kwargs: Any) -> Callable:
+    """Version-tolerant ``shard_map``.
+
+    Accepts the replication-check flag under either of its historical names
+    (``check_vma`` new, ``check_rep`` old) and forwards whichever spelling
+    the installed jax understands; other unknown kwargs are dropped rather
+    than exploding on older versions.
+    """
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        if "check_vma" in _SHARD_MAP_KWARGS:
+            kwargs["check_vma"] = check
+        elif "check_rep" in _SHARD_MAP_KWARGS:
+            kwargs["check_rep"] = check
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_KWARGS}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+# -- tree utilities --------------------------------------------------------------
+
+_tree_ns = getattr(jax, "tree", None)
+if _tree_ns is not None and hasattr(_tree_ns, "map"):
+    tree_map = _tree_ns.map
+    tree_leaves = _tree_ns.leaves
+    tree_flatten = _tree_ns.flatten
+    tree_unflatten = _tree_ns.unflatten
+    tree_structure = _tree_ns.structure
+else:                                               # pragma: no cover - old jax
+    tree_map = jax.tree_util.tree_map
+    tree_leaves = jax.tree_util.tree_leaves
+    tree_flatten = jax.tree_util.tree_flatten
+    tree_unflatten = jax.tree_util.tree_unflatten
+    tree_structure = jax.tree_util.tree_structure
+
+
+# -- meshes ----------------------------------------------------------------------
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]) -> Any:
+    """Version-tolerant ``jax.sharding.AbstractMesh``.
+
+    Newer jax takes ``(axis_sizes, axis_names)``; older versions take a
+    single ``((name, size), ...)`` shape tuple.  Probe the new form first.
+    """
+    cls = jax.sharding.AbstractMesh
+    try:
+        return cls(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return cls(tuple(zip(axis_names, axis_sizes)))
+
+
+def cost_analysis(compiled: Any) -> dict:
+    """Normalized ``Compiled.cost_analysis()``.
+
+    Older jax returns a one-element list of per-device dicts; newer jax
+    returns the dict directly.  Always returns a (possibly empty) dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+# -- pallas platform modules -----------------------------------------------------
+
+try:
+    from jax.experimental import pallas as pallas  # noqa: PLC0414
+except Exception:                                   # pragma: no cover
+    pallas = None
+
+try:
+    from jax.experimental.pallas import tpu as pallas_tpu
+except Exception:                                   # pragma: no cover
+    pallas_tpu = None
+
+try:
+    from jax.experimental.pallas import triton as pallas_triton
+except Exception:                                   # pragma: no cover
+    pallas_triton = None
+
+
+def has_pallas() -> bool:
+    """Pallas core is importable (interpret mode works on any backend)."""
+    return pallas is not None
+
+
+def has_pallas_tpu() -> bool:
+    """The Pallas TPU platform module is importable (needed for VMEM scratch
+    and TPU compiler params, including in interpret mode)."""
+    return pallas_tpu is not None
+
+
+def has_pallas_triton() -> bool:
+    return pallas_triton is not None
+
+
+def require_pallas(feature: str = "this kernel"):
+    if pallas is None:
+        raise RuntimeError(
+            f"{feature} needs jax.experimental.pallas, which is not "
+            f"importable in this jax install; use the xla_ref implementation")
+    return pallas
+
+
+def require_pallas_tpu(feature: str = "this kernel"):
+    if pallas_tpu is None:
+        raise RuntimeError(
+            f"{feature} needs jax.experimental.pallas.tpu, which is not "
+            f"importable in this jax install; use the xla_ref implementation")
+    return pallas_tpu
+
+
+# -- backend probes --------------------------------------------------------------
+
+def backend() -> str:
+    """The default jax backend platform name ('cpu' | 'gpu' | 'tpu')."""
+    return jax.default_backend()
+
+
+def on_cpu() -> bool:
+    return backend() == "cpu"
+
+
+def on_gpu() -> bool:
+    return backend() == "gpu"
+
+
+def on_tpu() -> bool:
+    return backend() == "tpu"
+
+
+# -- TPU compiler params / scratch -----------------------------------------------
+
+def tpu_compiler_params(**kwargs: Any) -> Any:
+    """Build the TPU Pallas compiler-params object for the installed jax.
+
+    Absorbs the ``TPUCompilerParams`` -> ``CompilerParams`` rename and drops
+    fields the installed class does not define.  Returns ``None`` when the
+    TPU platform module is unavailable (``pallas_call`` accepts that).
+    """
+    if pallas_tpu is None:
+        return None
+    cls = getattr(pallas_tpu, "CompilerParams", None) \
+        or getattr(pallas_tpu, "TPUCompilerParams", None)
+    if cls is None:                                 # pragma: no cover
+        return None
+    import dataclasses
+    if dataclasses.is_dataclass(cls):
+        known = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in kwargs.items() if k in known}
+    return cls(**kwargs)
+
+
+def vmem(shape: Sequence[int], dtype: Any) -> Any:
+    """A VMEM scratch allocation spec (TPU platform module required)."""
+    return require_pallas_tpu("VMEM scratch").VMEM(tuple(shape), dtype)

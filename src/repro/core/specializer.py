@@ -109,6 +109,14 @@ class SpecCtx:
         return value
 
     # -- paper Table 2: specialization API ------------------------------------
+    def point(self, point: SpecPoint) -> Any:
+        """Register a pre-built (possibly custom-subclassed) point and
+        resolve it against the active configuration.  Lets libraries ship
+        point types with their own candidate/validation semantics (e.g. the
+        kernel registry's ImplPoint, whose candidates are host-filtered but
+        whose validation accepts any registered implementation name)."""
+        return self._resolve(point)
+
     def enum(self, label: str, default: Any, choices: Sequence[Any],
              guard: Callable | None = None, guarded: bool = True) -> Any:
         """``spec_enum(lbl, x, ...)`` — value is one of ``choices``."""

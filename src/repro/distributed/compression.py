@@ -25,7 +25,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 __all__ = ["compressed_psum", "compressed_psum_tree"]
 

@@ -1,9 +1,13 @@
-"""Pallas TPU kernels for perf-critical compute hot spots.
+"""Backend-portable kernels for perf-critical compute hot spots.
 
 Each subpackage: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
-tiling), ``ops.py`` (jitted wrapper with xla|pallas|interpret impl switch),
-``ref.py`` (pure-jnp oracle).  Kernels are validated against their oracle in
-interpret mode on CPU; the ``xla`` path is what the multi-pod dry-run lowers.
+tiling, Pallas imported through ``repro.compat``), ``ops.py`` (public op
+that registers its named implementations — ``xla_ref``, ``pallas_tpu``,
+``pallas_interpret``, ``pallas_gpu`` where the body is platform-neutral —
+in :mod:`repro.kernels.registry` and dispatches through it), ``ref.py``
+(pure-jnp oracle).  Kernels are validated against their oracle in interpret
+mode on CPU; the ``xla_ref`` path is what the multi-pod dry-run lowers and
+the fallback target of every availability/guard miss.
 
 The paper's compute hot spot is the blocked matmul whose block size it
 specializes (MMulBlockBench); ``matmul`` is its TPU adaptation (BlockSpec
@@ -11,9 +15,12 @@ tiles = the specialized constants).  ``attention`` and ``rmsnorm`` are the
 LM framework's hot spots with the same tile-size spec points; ``fastpath``
 is the TPU-native form of the paper's Morpheus-style hot-key if-else chain.
 """
+from repro.kernels import registry
 from repro.kernels import (attention, fastpath, linear_attention,
                            matmul, rmsnorm)
 from repro.kernels.common import default_impl, resolve_impl
+from repro.kernels.registry import impl_point
 
 __all__ = ["attention", "fastpath", "linear_attention", "matmul",
-           "rmsnorm", "default_impl", "resolve_impl"]
+           "rmsnorm", "registry", "impl_point", "default_impl",
+           "resolve_impl"]

@@ -23,9 +23,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+from repro.compat import pallas as pl
 from repro.kernels.attention.ref import NEG_INF
 
 __all__ = ["flash_attention_pallas"]
@@ -117,6 +117,7 @@ def flash_attention_pallas(
     group: int = 1,            # q heads per kv head (GQA)
     interpret: bool = False,
 ) -> jnp.ndarray:
+    compat.require_pallas("flash_attention_pallas")
     bh, sq, d = q.shape
     bhk, skv, _ = k.shape
     dv = v.shape[-1]                 # may differ from d (e.g. MLA)
@@ -144,11 +145,11 @@ def flash_attention_pallas(
         out_specs=pl.BlockSpec((1, block_q, dv), lambda h, i, j: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, _LANES), jnp.float32),
-            pltpu.VMEM((block_q, _LANES), jnp.float32),
-            pltpu.VMEM((block_q, dv), jnp.float32),
+            compat.vmem((block_q, _LANES), jnp.float32),
+            compat.vmem((block_q, _LANES), jnp.float32),
+            compat.vmem((block_q, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

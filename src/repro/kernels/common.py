@@ -1,43 +1,33 @@
-"""Shared kernel plumbing: implementation selection & tiling helpers.
+"""Shared kernel plumbing: implementation-name resolution & tiling helpers.
 
-Every kernel package exposes ``ops.py`` with an ``impl=`` switch:
-
-* ``"xla"``      — the pure-jnp reference composition (``ref.py``), jitted.
-                   This is what the multi-pod dry-run lowers (no TPU backend
-                   in this container), and the numerical oracle.
-* ``"pallas"``   — the TPU kernel (``pl.pallas_call`` + BlockSpec VMEM
-                   tiling).  The TARGET implementation on real hardware.
-* ``"interpret"``— the same Pallas kernel in interpreter mode: the kernel
-                   body runs in Python on CPU, validating the kernel logic
-                   (used by tests on this CPU-only container).
+Implementation selection lives in :mod:`repro.kernels.registry`; every
+kernel package's ``ops.py`` registers its named entries (``xla_ref``,
+``pallas_tpu``, ``pallas_interpret``, ...) there and dispatches through it.
+The helpers here only normalize impl *names* (including the legacy
+``xla`` / ``pallas`` / ``interpret`` spellings) and keep the tiling math.
 
 The choice of implementation is itself a specialization point in the model
-step builders (``spec.enum("kernel_impl", ...)``).
+step builders (``registry.impl_point(spec, family)``).
 """
 from __future__ import annotations
 
-import os
-
-import jax
+from repro.kernels.registry import canonical_name, env_impl
 
 __all__ = ["default_impl", "resolve_impl", "cdiv", "pad_to_multiple"]
 
-_VALID = ("xla", "pallas", "interpret")
+
+def default_impl() -> str | None:
+    """The impl name forced by the environment, or None for registry auto
+    (best available entry for the current backend)."""
+    return env_impl()
 
 
-def default_impl() -> str:
-    env = os.environ.get("REPRO_KERNEL_IMPL")
-    if env:
-        return env
-    platform = jax.default_backend()
-    return "pallas" if platform == "tpu" else "xla"
-
-
-def resolve_impl(impl: str | None) -> str:
-    impl = impl or default_impl()
-    if impl not in _VALID:
-        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
-    return impl
+def resolve_impl(impl: str | None) -> str | None:
+    """Canonicalize an impl name (legacy aliases included); None = auto."""
+    impl = impl if impl is not None else default_impl()
+    if impl is None or impl == "auto":
+        return None
+    return canonical_name(impl)
 
 
 def cdiv(a: int, b: int) -> int:

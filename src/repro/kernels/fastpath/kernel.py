@@ -21,8 +21,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.compat import pallas as pl
 
 __all__ = ["fastpath_lookup_pallas"]
 
@@ -48,6 +49,7 @@ def fastpath_lookup_pallas(
     block_b: int = 256,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    compat.require_pallas("fastpath_lookup_pallas")
     b, kk = x.shape
     n, v = values.shape
     assert b % block_b == 0, (b, block_b)

@@ -1,0 +1,163 @@
+"""Chunked linear-attention recurrence — the shared engine for RWKV6 (Finch)
+and Mamba-style SSM heads (Hymba).
+
+This is a *leaf* module (imports nothing but jax) so both the kernel oracle
+(``repro.kernels.linear_attention.ref``) and the model layers
+(``repro.models.chunk_scan`` re-exports it) can depend on it without
+creating the kernels <-> models import cycle.
+
+Computes, per head, the gated linear recurrence
+
+    S_t = diag(w_t) . S_{t-1} + k_t v_t^T            (state: (dk, dv))
+    o_t = q_t . S_{t-1} + (q_t . (u (.) k_t)) v_t     (exclusive, RWKV6)
+    o_t = q_t . S_t                                   (inclusive, SSM)
+
+in **chunks**: within a chunk everything is dense matmuls (MXU work, honest
+HLO FLOPs); across chunks the state composes through an associative scan
+(log-depth combinator tree — deliberately no ``lax.scan``/while loop, which
+XLA's cost model counts only once and which would also serialize the layer).
+
+Numerics: per-step log-decay is clamped to ``>= log_decay_min`` so the
+within-chunk ``exp(-cumsum(log w))`` factors stay representable in fp32
+(bound: ``exp(-log_decay_min * chunk)``; defaults give exp(2*64) -> inf-safe
+only for chunk<=44, so the default clamp is -1.0 with chunk 64 -> exp(64),
+fine).  The pure per-step oracle in ``ref`` applies the same clamp, so the
+chunked implementation is exact up to fp32 roundoff, not an approximation.
+
+The chunk length is an Iridescent spec point (``spec.enum("chunk_len",...)``)
+— it trades VMEM footprint (c^2 score tiles) against cross-chunk scan depth,
+the same trade the paper's matmul block size makes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_attention", "step_linear_attention",
+           "naive_linear_attention"]
+
+
+def _combine(a, b):
+    """Associative composition of (decay, kv) chunk summaries.
+
+    Leading axis is the scan axis; decay (n, dk) acts on state rows (n, dk, dv).
+    """
+    (da, Sa), (db, Sb) = a, b
+    return (da * db, db[..., None] * Sa + Sb)
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray,          # (T, dk)
+    k: jnp.ndarray,          # (T, dk)
+    v: jnp.ndarray,          # (T, dv)
+    log_w: jnp.ndarray,      # (T, dk) or (T, 1): per-step log decay (<= 0)
+    *,
+    bonus: jnp.ndarray | None = None,   # (dk,) RWKV "u" (exclusive only)
+    inclusive: bool = False,
+    chunk: int = 64,
+    init_state: jnp.ndarray | None = None,   # (dk, dv)
+    return_state: bool = False,
+):
+    """Returns o (T, dv) [and final state (dk, dv) if requested]."""
+    t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(nc, chunk, dk).astype(f32)
+    kc = k.reshape(nc, chunk, dk).astype(f32)
+    vc = v.reshape(nc, chunk, dv).astype(f32)
+    lw = jnp.broadcast_to(log_w.astype(f32), (t, dk)).reshape(nc, chunk, dk)
+
+    la = jnp.cumsum(lw, axis=1)                    # (nc, c, dk) inclusive
+    la_prev = la - lw                              # exclusive (la_{i-1})
+    la_tot = la[:, -1]                             # (nc, dk)
+
+    # Chunk summaries: total decay + decayed kv sum.
+    k_dec = kc * jnp.exp(la_tot[:, None, :] - la)  # k_j * prod_{j<s<=c} w_s
+    S_add = jnp.einsum("nck,ncv->nkv", k_dec, vc)  # (nc, dk, dv)
+
+    # Prefix-compose to get the state entering each chunk.
+    d_scan, S_scan = jax.lax.associative_scan(
+        _combine, (jnp.exp(la_tot), S_add), axis=0)
+    S0 = init_state.astype(f32) if init_state is not None else \
+        jnp.zeros((dk, dv), f32)
+    # State entering chunk n = compose(S0, prefix_{n-1}).
+    ones = jnp.ones_like(d_scan[:1])
+    zeros = jnp.zeros_like(S_scan[:1])
+    d_in = jnp.concatenate([ones, d_scan[:-1]], 0)     # (nc, dk)
+    S_in = jnp.concatenate([zeros, S_scan[:-1]], 0)    # (nc, dk, dv)
+    S_enter = d_in[:, :, None] * S0[None] + S_in       # (nc, dk, dv)
+
+    la_q = la if inclusive else la_prev
+    qt = qc * jnp.exp(la_q)                            # (nc, c, dk)
+    kt = kc * jnp.exp(-la)                             # bounded by clamp
+    scores = jnp.einsum("nck,nsk->ncs", qt, kt)        # (nc, c, c)
+    idx = jnp.arange(chunk)
+    if inclusive:
+        mask = idx[:, None] >= idx[None, :]
+    else:
+        mask = idx[:, None] > idx[None, :]
+    scores = jnp.where(mask[None], scores, 0.0)
+    if bonus is not None and not inclusive:
+        diag = jnp.einsum("nck,k,nck->nc", qc, bonus.astype(f32), kc)
+        scores = scores + diag[:, :, None] * jnp.eye(chunk, dtype=f32)[None]
+    intra = jnp.einsum("ncs,nsv->ncv", scores, vc)
+    inter = jnp.einsum("nck,nkv->ncv", qt, S_enter)
+    o = (intra + inter).reshape(t, dv)
+
+    if not return_state:
+        return o.astype(v.dtype)
+    S_final = d_scan[-1][:, None] * S0 + S_scan[-1]
+    return o.astype(v.dtype), S_final
+
+
+def step_linear_attention(
+    q: jnp.ndarray,          # (dk,)
+    k: jnp.ndarray,          # (dk,)
+    v: jnp.ndarray,          # (dv,)
+    log_w: jnp.ndarray,      # (dk,) or (1,)
+    state: jnp.ndarray,      # (dk, dv)
+    *,
+    bonus: jnp.ndarray | None = None,
+    inclusive: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. Returns (o (dv,), new_state)."""
+    f32 = jnp.float32
+    q32, k32, v32 = q.astype(f32), k.astype(f32), v.astype(f32)
+    s32 = state.astype(f32)
+    w = jnp.exp(jnp.broadcast_to(log_w.astype(f32), q32.shape))
+    kv = k32[:, None] * v32[None, :]
+    new_state = w[:, None] * s32 + kv
+    if inclusive:
+        o = new_state.T @ q32
+    else:
+        o = s32.T @ q32
+        if bonus is not None:
+            o = o + (q32 * bonus.astype(f32) * k32).sum() * v32
+    return o.astype(v.dtype), new_state
+
+
+def naive_linear_attention(q, k, v, log_w, *, bonus=None, inclusive=False,
+                           init_state=None, return_state=False):
+    """Per-step oracle (lax.scan) — tests only; O(T) serial."""
+    t, dk = q.shape
+    dv = v.shape[-1]
+    S0 = init_state if init_state is not None else jnp.zeros((dk, dv),
+                                                             jnp.float32)
+    lw = jnp.broadcast_to(log_w, (t, dk))
+
+    def step(S, inputs):
+        qi, ki, vi, lwi = inputs
+        o, S = step_linear_attention(qi, ki, vi, lwi, S, bonus=bonus,
+                                     inclusive=inclusive)
+        return S, o
+
+    S, o = jax.lax.scan(step, S0.astype(jnp.float32), (q, k, v, lw))
+    if return_state:
+        return o, S
+    return o

@@ -21,8 +21,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.compat import pallas as pl
 
 __all__ = ["linear_attention_pallas"]
 
@@ -83,6 +84,7 @@ def linear_attention_pallas(
     chunk: int = 64,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    compat.require_pallas("linear_attention_pallas")
     bh, t, dk = q.shape
     dv = v.shape[-1]
     assert t % chunk == 0, (t, chunk)
@@ -104,8 +106,8 @@ def linear_attention_pallas(
         ],
         out_specs=pl.BlockSpec((1, chunk, dv), lambda h, i: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
-        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((dk, dv), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, log_w, bonus)

@@ -1,13 +1,13 @@
 """Pure-jnp oracle for the chunked linear-attention kernel: re-exports the
-loop-free chunked formulation from ``repro.models.chunk_scan`` (itself
+loop-free chunked formulation from the ``chunk_math`` leaf module (itself
 validated against a per-step recurrence oracle)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.chunk_scan import (chunked_linear_attention,
-                                     naive_linear_attention)
+from repro.kernels.linear_attention.chunk_math import (
+    chunked_linear_attention, naive_linear_attention)
 
 __all__ = ["linear_attention", "chunked_linear_attention",
            "naive_linear_attention"]

@@ -18,8 +18,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.compat import pallas as pl
 
 __all__ = ["matmul_pallas"]
 
@@ -54,6 +55,7 @@ def matmul_pallas(
     Requires ``m % bm == n % bn == k % bk == 0`` (the ops wrapper pads, or the
     ``assume_divisible`` spec point removes the padding code entirely).
     """
+    compat.require_pallas("matmul_pallas")
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)
@@ -71,8 +73,8 @@ def matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((bm, bn), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, y)

@@ -11,8 +11,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.compat import pallas as pl
 
 __all__ = ["rmsnorm_pallas"]
 
@@ -33,6 +34,7 @@ def rmsnorm_pallas(
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    compat.require_pallas("rmsnorm_pallas")
     rows, d = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     return pl.pallas_call(

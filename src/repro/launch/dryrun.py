@@ -184,7 +184,8 @@ def analyze(cfg: ModelConfig, shape: Shape, mesh, spec_cfg: dict,
         v = getattr(mem, attr, None)
         if v is not None:
             mem_d[attr] = int(v)
-    ca = compiled.cost_analysis() or {}
+    from repro import compat
+    ca = compat.cost_analysis(compiled)
     cost = {k: float(ca[k]) for k in ("flops", "bytes accessed") if k in ca}
     coll = parse_collectives(compiled.as_text())
     return {

@@ -62,6 +62,12 @@ CHAINS = {
                            "logits_dtype": "bfloat16"}),
         ("c3_chunk32", {"swa_impl": "banded", "logits_dtype": "bfloat16",
                         "chunk_len": 32}),
+        # explicit generic-kernel baseline via the registry impl points
+        # (xla_ref everywhere) — the reference row the impl sweep beats
+        ("c4_xlaref", {"swa_impl": "banded", "logits_dtype": "bfloat16",
+                       "chunk_len": 32, "attention_impl": "xla_ref",
+                       "linear_attention_impl": "xla_ref",
+                       "rmsnorm_impl": "xla_ref"}),
     ],
 }
 

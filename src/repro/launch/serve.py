@@ -46,7 +46,10 @@ def main() -> None:
                              RunOptions(decode_cache_dtype="float32"))
     tokens = jnp.zeros((args.batch,), jnp.int32)
 
-    labels = ["cache_dtype"] + (
+    # decode spec points + the kernel-implementation choice (the registry
+    # candidates are host-filtered, so on CPU this sweeps xla_ref vs the
+    # interpreter and converges on xla_ref by measured tok/s).
+    labels = ["cache_dtype", "rmsnorm_impl"] + (
         ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
     explorer = Explorer(
         handler,

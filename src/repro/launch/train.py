@@ -90,7 +90,8 @@ def main() -> None:
     if args.explore:
         space = handler.spec_space()
         policy = CoordinateDescent(
-            space, labels=["remat", "microbatch", "logits_dtype"],
+            space,
+            labels=["remat", "microbatch", "logits_dtype", "rmsnorm_impl"],
             max_passes=1)
         explorer = Explorer(handler, policy, dwell=args.dwell,
                             metric_fn=lambda: handler.tput.read(),

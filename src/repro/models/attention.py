@@ -76,7 +76,8 @@ def apply_gqa(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     q, k, v = _project_qkv(p, x, cfg, opts, positions)
     out = attn_op(q, k, v, causal=True, window=window,
                   block_q=opts.block_q, block_kv=opts.block_kv,
-                  impl=opts.impl, swa_impl=opts.swa_impl)  # (B,H,S,dh)
+                  impl=opts.impl_for("attention"),
+                  swa_impl=opts.swa_impl)              # (B,H,S,dh)
     out = constrain(out, ("batch", "heads", "seq", "head_dim"))
     y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return constrain(y, ("batch", "seq", None))

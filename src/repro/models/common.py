@@ -19,11 +19,21 @@ class KernelOptions:
     """Per-step kernel configuration — populated from Iridescent spec points.
 
     These are the constants the specializer bakes into each variant: the
-    kernel implementation choice and the VMEM tile shapes (the paper's block
-    size ``B``, TPU edition).
+    kernel implementation choices and the VMEM tile shapes (the paper's
+    block size ``B``, TPU edition).
+
+    ``impl`` is the step-wide implementation choice (a registry entry name —
+    ``xla_ref`` | ``pallas_tpu`` | ``pallas_interpret`` | ... — legacy
+    ``xla``/``pallas``/``interpret`` spellings still accepted; ``None`` =
+    registry auto).  The per-family ``*_impl`` fields override it for one
+    kernel family — each is its own spec point, so the policy can e.g. keep
+    attention on the Pallas kernel while pinning rmsnorm to ``xla_ref``.
     """
 
-    impl: str | None = None          # xla | pallas | interpret (None = auto)
+    impl: str | None = None          # step-wide default (None = auto)
+    attention_impl: str | None = None
+    rmsnorm_impl: str | None = None
+    linear_attention_impl: str | None = None
     block_q: int = 512
     block_kv: int = 512
     norm_block_rows: int = 256
@@ -33,13 +43,18 @@ class KernelOptions:
     chunk_len: int = 64              # linear-attention chunk size (rwkv/ssm)
     swa_impl: str = "full"           # full | banded (sliding-window band only)
 
+    def impl_for(self, family: str) -> str | None:
+        """The effective impl choice for one kernel family (families the
+        model step does not route per-family fall through to ``impl``)."""
+        return getattr(self, f"{family}_impl", None) or self.impl
+
 
 def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
              opts: KernelOptions | None = None) -> jnp.ndarray:
     opts = opts or KernelOptions()
     return rmsnorm_kernel.rmsnorm(x, weight, eps=eps,
                                   block_rows=opts.norm_block_rows,
-                                  impl=opts.impl)
+                                  impl=opts.impl_for("rmsnorm"))
 
 
 def rope(positions: jnp.ndarray, dim: int, theta: float = 1e4,

@@ -95,7 +95,7 @@ def apply_mla(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     out = attn_op(q, k, v, causal=True, window=window,
                   scale=(nd + rd) ** -0.5,
                   block_q=opts.block_q, block_kv=opts.block_kv,
-                  impl=opts.impl)                        # (B,H,S,dh)
+                  impl=opts.impl_for("attention"))     # (B,H,S,dh)
     y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(cdt))
     return constrain(y, ("batch", "seq", None))
 

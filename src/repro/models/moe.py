@@ -38,9 +38,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed.sharding import constrain, current_mesh
 from repro.models.common import dense_init
 from repro.models.config import ModelConfig

@@ -124,7 +124,8 @@ def apply_rwkv6(p: dict, x: jnp.ndarray, cfg: ModelConfig,
         rh.reshape(b * h, s, hs), kh.reshape(b * h, s, hs),
         vh.reshape(b * h, s, hs), lwh.reshape(b * h, s, hs),
         bonus=u_b.reshape(b * h, hs), inclusive=False,
-        chunk=min(opts.chunk_len, s), impl=opts.impl)
+        chunk=min(opts.chunk_len, s),
+        impl=opts.impl_for("linear_attention"))
     o = o.reshape(b, h, s, hs)                        # (B,H,S,hs)
 
     o = o.transpose(0, 2, 1, 3)                        # (B,S,H,hs)

@@ -96,7 +96,8 @@ def apply_ssm(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     vb = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
     wb = log_a.transpose(0, 2, 1)[..., None].reshape(b * h, s, 1)
     o = linear_attention(qb, kb, vb, wb, inclusive=True,
-                         chunk=min(opts.chunk_len, s), impl=opts.impl)
+                         chunk=min(opts.chunk_len, s),
+                         impl=opts.impl_for("linear_attention"))
     o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)  # (B,S,H,dh)
     o = o + xh * p["skip_d"].astype(cdt)[None, None, :, None]
     o = o.reshape(b, s, h * dh)

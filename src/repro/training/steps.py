@@ -23,6 +23,7 @@ from repro.core.specializer import SpecCtx
 from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
                                         constrain, mesh_context,
                                         spec_for_axes)
+from repro.kernels import registry as kernel_registry
 from repro.models import (KernelOptions, ModelConfig, MoEOptions, RunOptions)
 from repro.models import transformer as model
 from repro.optim import OptConfig, apply_updates, init_opt_state
@@ -87,10 +88,32 @@ def run_options_from_spec(spec: SpecCtx, cfg: ModelConfig, *,
                           kernel_impl: str | None = None,
                           scan_layers: bool = True,
                           window: int | None = None,
-                          for_decode: bool = False) -> RunOptions:
+                          for_decode: bool = False,
+                          differentiable: bool = False) -> RunOptions:
     """Declare the model-level spec points and bundle the chosen constants."""
+    # Implementation choice per kernel family the step exercises: the
+    # candidate set is the registry entries *available on this host*, so the
+    # policy only ever explores implementations that can run here; a choice
+    # that still guard-misses at dispatch degrades to xla_ref inside the
+    # registry (paper §4.4.3).  Differentiated steps (training) further
+    # restrict to entries jax.grad can flow through.
+    uses_attention = cfg.mixer in ("attn", "hymba")
+    uses_linear_attention = cfg.mixer in ("rwkv6", "hymba")
+    grad = differentiable
     ko = KernelOptions(
         impl=kernel_impl,
+        rmsnorm_impl=kernel_registry.impl_point(spec, "rmsnorm",
+                                                default=kernel_impl,
+                                                require_grad=grad),
+        attention_impl=(kernel_registry.impl_point(spec, "attention",
+                                                   default=kernel_impl,
+                                                   require_grad=grad)
+                        if uses_attention else None),
+        linear_attention_impl=(
+            kernel_registry.impl_point(spec, "linear_attention",
+                                       default=kernel_impl,
+                                       require_grad=grad)
+            if uses_linear_attention else None),
         block_q=spec.enum("block_q", 512, (128, 256, 512, 1024),
                           guarded=False),
         block_kv=spec.enum("block_kv", 512, (128, 256, 512, 1024),
@@ -200,7 +223,8 @@ def make_train_builder(
 
     def builder(spec: SpecCtx) -> Callable:
         opts = run_options_from_spec(spec, cfg, kernel_impl=kernel_impl,
-                                     scan_layers=scan_layers, window=window)
+                                     scan_layers=scan_layers, window=window,
+                                     differentiable=True)
         micro = spec.enum("microbatch", 1, (1, 2, 4), guarded=False)
         gather_logits = spec.enum("logits_layout", "sharded",
                                   ("sharded", "gathered"),

@@ -1,0 +1,194 @@
+"""Minimal offline stand-in for ``hypothesis``.
+
+The tier-1 suite must collect and pass on hosts with no network access, so
+when the real ``hypothesis`` package is absent, ``conftest.py`` installs
+this shim under the ``hypothesis`` / ``hypothesis.strategies`` module names.
+
+Semantics: ``@given`` runs the wrapped test over a *fixed* set of examples
+drawn deterministically (seeded per test name) from the strategy objects —
+property tests degrade to parameterized example tests rather than being
+skipped.  Only the strategy surface the repo's tests use is implemented:
+``integers``, ``booleans``, ``sampled_from``, ``lists``, ``tuples``,
+``dictionaries``; plus ``settings(max_examples=..., deadline=...)``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 10
+_MAX_UNIQUE_RETRIES = 200
+
+
+class Strategy:
+    """Base: a strategy draws one value from a ``random.Random``."""
+
+    def draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Booleans(Strategy):
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+
+    def draw(self, rng):
+        return rng.choice(self.options)
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts: Strategy):
+        self.parts = parts
+
+    def draw(self, rng):
+        return tuple(p.draw(rng) for p in self.parts)
+
+
+class _Lists(Strategy):
+    def __init__(self, elem: Strategy, min_size: int = 0,
+                 max_size: int | None = None, unique: bool = False):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+        self.unique = unique
+
+    def draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        out: list = []
+        tries = 0
+        while len(out) < size and tries < _MAX_UNIQUE_RETRIES:
+            v = self.elem.draw(rng)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _Dictionaries(Strategy):
+    def __init__(self, keys: Strategy, values: Strategy, min_size: int = 0,
+                 max_size: int | None = None):
+        self.keys = keys
+        self.values = values
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+
+    def draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        out: dict = {}
+        tries = 0
+        while len(out) < size and tries < _MAX_UNIQUE_RETRIES:
+            tries += 1
+            out[self.keys.draw(rng)] = self.values.draw(rng)
+        return out
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def booleans() -> Strategy:
+    return _Booleans()
+
+
+def sampled_from(options: Sequence[Any]) -> Strategy:
+    return _SampledFrom(options)
+
+
+def tuples(*parts: Strategy) -> Strategy:
+    return _Tuples(*parts)
+
+
+def lists(elem: Strategy, *, min_size: int = 0, max_size: int | None = None,
+          unique: bool = False) -> Strategy:
+    return _Lists(elem, min_size=min_size, max_size=max_size, unique=unique)
+
+
+def dictionaries(keys: Strategy, values: Strategy, *, min_size: int = 0,
+                 max_size: int | None = None) -> Strategy:
+    return _Dictionaries(keys, values, min_size=min_size, max_size=max_size)
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy) -> Callable:
+    """Run the test over a fixed, deterministically drawn example set."""
+
+    def deco(test: Callable) -> Callable:
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(test.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = tuple(s.draw(rng) for s in arg_strategies)
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                test(*args, *drawn, **kwargs, **drawn_kw)
+
+        # mimic real hypothesis' attribute shape: plugins (e.g. anyio)
+        # probe fn.hypothesis.inner_test to unwrap property tests.
+        marker = types.SimpleNamespace(inner_test=test)
+        wrapper.hypothesis = marker
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper is invoked with no arguments, like real hypothesis tests.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored: Any) -> Callable:
+    del deadline
+
+    def deco(fn: Callable) -> Callable:
+        # applies above @given: cap the wrapper's example count
+        fn._shim_max_examples = min(max_examples, 25)
+        return fn
+
+    return deco
+
+
+def assume(condition: Any) -> bool:
+    """Real hypothesis prunes the example; the shim just skips via assert."""
+    if not condition:
+        raise AssertionError("shim assume() got a falsy condition; "
+                             "restrict the strategy instead")
+    return True
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` (+ ``.strategies``) in
+    ``sys.modules`` so existing ``from hypothesis import ...`` lines work."""
+    import sys
+    import types
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "tuples", "lists",
+                 "dictionaries"):
+        setattr(st_mod, name, globals()[name])
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.assume = assume
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_repro_shim__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

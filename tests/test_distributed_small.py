@@ -15,6 +15,7 @@ import pytest
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"   # never probe TPU/GPU runtimes here
 import json
 import jax, jax.numpy as jnp
 import numpy as np
@@ -37,7 +38,8 @@ for arch in ["yi-6b", "deepseek-v2-236b", "rwkv6-1.6b", "hymba-1.5b"]:
         step, args, kw = build_lowerable(cfg, shape, mesh, {}, OptConfig(),
                                          scan_layers=True)
         compiled = jax.jit(step, **kw).lower(*args).compile()
-        ca = compiled.cost_analysis()
+        from repro import compat
+        ca = compat.cost_analysis(compiled)
         out[f"{arch}:{shape.kind}"] = float(ca.get("flops", 0))
 
 # 1b) shard_map expert-parallel MoE == dense oracle (ample capacity)

@@ -4,7 +4,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.kernels import attention, fastpath, matmul, rmsnorm
+
+# Without the Pallas TPU module the interpret entries are unavailable and
+# impl="interpret" would silently fall back to xla_ref — every oracle
+# comparison below would pass vacuously.  Skip instead.
+pytestmark = pytest.mark.skipif(
+    not compat.has_pallas_tpu(),
+    reason="Pallas TPU module not importable: interpret-mode kernels "
+           "unavailable, oracle comparisons would be vacuous")
 
 RS = np.random.RandomState(0)
 

@@ -3,7 +3,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.kernels.linear_attention import linear_attention
+
+# impl="interpret" silently degrades to xla_ref without the Pallas TPU
+# module, turning every oracle comparison vacuous — skip instead.
+pytestmark = pytest.mark.skipif(
+    not compat.has_pallas_tpu(),
+    reason="Pallas TPU module not importable: interpret-mode kernel "
+           "unavailable, oracle comparisons would be vacuous")
 
 RS = np.random.RandomState(2)
 

@@ -1,17 +1,18 @@
 """Logical-axis sharding rules (pure logic; mesh-full tests live in
 test_distributed_small.py which spawns an 8-device subprocess)."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.distributed import DEFAULT_RULES, ShardingRules, logical_to_spec
 from repro.training.steps import SHARDING_PROFILES
 
 
 def _mesh(shape=(2, 2), axes=("data", "model")):
     # abstract mesh over the single CPU device: use jax.sharding.Mesh with
-    # reshaped devices is impossible with 1 device -> use AbstractMesh.
-    return jax.sharding.AbstractMesh(shape, axes)
+    # reshaped devices is impossible with 1 device -> use AbstractMesh
+    # (constructor signature drifts across jax versions -> compat).
+    return compat.abstract_mesh(shape, axes)
 
 
 def test_rules_make_and_replace():
