@@ -6,7 +6,41 @@ from typing import Callable
 
 import jax
 
-__all__ = ["time_fn", "Row", "fmt_rows"]
+__all__ = ["time_fn", "Row", "fmt_rows", "measure_dispatch_overhead"]
+
+
+def measure_dispatch_overhead(iters: int = 500) -> dict:
+    """Trampoline dispatch cost on the cheapest possible handler.
+
+    Times three paths (microseconds/call): the AOT executable called
+    directly (the floor), the handler's lock-free fast path, and the fast
+    path with the per-call throughput bump disabled.  Used by both
+    fig11_overheads and serve_bench so the two report the same
+    methodology.
+    """
+    import jax.numpy as jnp
+    from repro.core import IridescentRuntime
+
+    rt = IridescentRuntime(async_compile=False)
+    try:
+        h = rt.register("micro", lambda spec: (lambda x: x * x))
+        x = jnp.float32(3.0)
+        h(x)                         # capture specs + AOT the generic
+        v = h.variants()[0]
+        target = v.compiled if v.compiled is not None else v.jitted
+        us_direct = time_fn(target, x, iters=iters)
+        us_fast = time_fn(h, x, iters=iters)
+        h.count_calls = False
+        us_fast_nocount = time_fn(h, x, iters=iters)
+        h.count_calls = True
+        return {
+            "direct": round(us_direct, 3),
+            "trampoline_fast": round(us_fast, 3),
+            "trampoline_fast_nocount": round(us_fast_nocount, 3),
+            "overhead": round(us_fast - us_direct, 3),
+        }
+    finally:
+        rt.shutdown()
 
 
 def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 20,

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, measure_dispatch_overhead, time_fn
 from repro.core import IridescentRuntime, guards
 from repro.core.instrumentation import hist_tap
 
@@ -23,6 +23,18 @@ def run() -> list[Row]:
         return lambda x: x * x
 
     x = jnp.float32(3.0)
+
+    # --- trampoline dispatch overhead: the lock-free fast path vs calling
+    # the AOT executable directly (the floor), with and without the
+    # per-call throughput bump.
+    d = measure_dispatch_overhead()
+    rows.append(Row("fig11/dispatch_direct", d["direct"]))
+    rows.append(Row("fig11/dispatch_fast", d["trampoline_fast"],
+                    f"+{d['overhead']:.2f}us trampoline"))
+    rows.append(Row("fig11/dispatch_fast_nocount",
+                    d["trampoline_fast_nocount"],
+                    f"+{d['trampoline_fast_nocount'] - d['direct']:.2f}us "
+                    f"trampoline (tput bump off)"))
     for rate in (0.0, 0.01, 0.1, 1.0):
         rt = IridescentRuntime(async_compile=False)
         h = rt.register("f", fb)

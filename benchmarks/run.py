@@ -12,8 +12,9 @@ import traceback
 from benchmarks import (fig4_fastpath, fig6_batch_explore,
                         fig7_workload_adapt, fig8_phase_adapt,
                         fig9_fastpath_size, fig10_compile_scaling,
-                        fig11_overheads, roofline, table1_blocksize,
-                        table3_const_vs_var, table4_compile_time)
+                        fig11_overheads, roofline, serve_bench,
+                        table1_blocksize, table3_const_vs_var,
+                        table4_compile_time)
 
 MODULES = [
     ("table1", table1_blocksize),
@@ -26,6 +27,8 @@ MODULES = [
     ("table4", table4_compile_time),
     ("fig10", fig10_compile_scaling),
     ("fig11", fig11_overheads),
+    # also writes BENCH_serve.json (override path: $BENCH_SERVE_JSON)
+    ("serve", serve_bench),
     ("roofline", roofline),
 ]
 

@@ -1,0 +1,141 @@
+"""Reduced serve benchmark with machine-readable output (BENCH_serve.json).
+
+Runs the launch/serve decode loop in-process on a reduced model, then
+emits one JSON document with the three numbers this repo's perf
+trajectory is tracked by:
+
+* ``tok_per_s``            — end-to-end decode throughput,
+* ``compile``              — CompileService totals (XLA compiles, cache
+                             hits, cancelled stale builds, total compile
+                             seconds) plus variant-cache stats,
+* ``dispatch_overhead_us`` — trampoline cost over calling the AOT
+                             executable directly (measured on a trivial
+                             handler so the number isolates the dispatch
+                             machinery, not the model).
+
+CLI:
+    PYTHONPATH=src:. python -m benchmarks.serve_bench \
+        --steps 120 --out BENCH_serve.json
+
+Also runs under ``benchmarks/run.py`` (module name ``serve``), where it
+writes ``BENCH_serve.json`` to the CWD (override with $BENCH_SERVE_JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, measure_dispatch_overhead
+from repro import configs
+from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
+                        IridescentRuntime)
+from repro.models import transformer as model
+from repro.models.transformer import RunOptions
+from repro.training import make_decode_builder
+
+
+def run_serve(steps: int = 120, arch: str = "qwen3-0.6b", batch: int = 4,
+              max_len: int = 64, dwell: int = 10, compile_workers: int = 2,
+              prefetch: int = 2, cache_dir: str | None = None) -> dict:
+    cfg = configs.get_reduced(arch).replace(compute_dtype="float32")
+    variant_cache = (os.path.join(cache_dir, "variants")
+                     if cache_dir else None)
+    rt = IridescentRuntime(async_compile=True,
+                           max_compile_workers=compile_workers,
+                           variant_cache=variant_cache)
+    handler = rt.register(
+        "serve_step", make_decode_builder(cfg, kernel_impl="xla"),
+        donate_argnums=1)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    cache = model.init_cache(cfg, batch, max_len,
+                             RunOptions(decode_cache_dtype="float32"))
+    tokens = jnp.zeros((batch,), jnp.int32)
+
+    labels = ["cache_dtype", "rmsnorm_impl"] + (
+        ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
+    explorer = Explorer(
+        handler, ExhaustiveSweep.from_space(handler.spec_space(), labels),
+        dwell=dwell, change_detector=ChangeDetector(0.3),
+        wait_compiles=False, prefetch=prefetch)
+
+    t0 = time.perf_counter()
+    for step in range(steps):
+        pos = jnp.int32(step % max_len)
+        logits, cache = handler(params, cache, tokens, pos)
+        explorer.step()
+    jax.block_until_ready(logits)
+    wall_s = time.perf_counter() - t0
+    rt.compile_service.drain(timeout=120)   # settle in-flight builds
+    best, best_metric = explorer.policy.best()
+    compile_stats = rt.compile_stats()
+    n_variants = len(handler.variants())
+    rt.shutdown()
+
+    return {
+        "bench": "serve",
+        "arch": arch,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "steps": steps,
+        "batch": batch,
+        "wall_s": round(wall_s, 3),
+        "tok_per_s": round(steps * batch / wall_s, 2),
+        "best_config": {k: repr(v) for k, v in (best or {}).items()},
+        "variants": n_variants,
+        "guard_misses": handler.guard_misses,
+        "compile": compile_stats,
+        "dispatch_overhead_us": measure_dispatch_overhead(),
+    }
+
+
+def write_json(path: str, result: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def run() -> list[Row]:
+    """benchmarks/run.py entry: CSV rows + BENCH_serve.json side artifact."""
+    result = run_serve()
+    write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
+    d = result["dispatch_overhead_us"]
+    return [
+        Row("serve/tok_per_s", result["tok_per_s"],
+            f"wall={result['wall_s']}s"),
+        Row("serve/compile_total_s",
+            result["compile"]["total_compile_s"] * 1e6,
+            f"xla_compiles={result['compile']['xla_compiles']} "
+            f"cache_hits={result['compile']['cache_hits']} "
+            f"cancelled={result['compile']['cancelled']}"),
+        Row("serve/dispatch_fast", d["trampoline_fast"],
+            f"+{d['overhead']}us vs direct"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--dwell", type=int, default=10)
+    ap.add_argument("--compile-workers", type=int, default=2)
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    result = run_serve(steps=args.steps, arch=args.arch, batch=args.batch,
+                       max_len=args.max_len, dwell=args.dwell,
+                       compile_workers=args.compile_workers,
+                       prefetch=args.prefetch, cache_dir=args.cache_dir)
+    write_json(args.out, result)
+    print(json.dumps(result, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
-from repro.checkpoint.store import CheckpointManager
+from repro.checkpoint.store import (CheckpointManager, restore_spec_state,
+                                    save_spec_state)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "restore_spec_state", "save_spec_state"]

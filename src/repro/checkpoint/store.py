@@ -10,11 +10,18 @@ Elastic re-sharding: leaves are stored as full (host-gathered) arrays plus
 the *logical axes* tree; ``restore`` re-places them with whatever mesh/rules
 are active — so a job restarted on a different pod count (elastic scaling)
 reshards transparently.
+
+Specialization state also persists here: the checkpoint directory carries a
+``variants/`` subdirectory (the runtime's persistent
+:class:`~repro.core.variant_cache.VariantCache` of serialized AOT
+executables) and a ``spec_state.json`` (active configuration per handler),
+so a restarted job reaches its tuned configs with zero recompiles.
 """
 from __future__ import annotations
 
 import concurrent.futures
 import json
+import logging
 import os
 import shutil
 import tempfile
@@ -25,7 +32,85 @@ import numpy as np
 
 from repro.distributed.sharding import spec_for_axes
 
-__all__ = ["CheckpointManager"]
+logger = logging.getLogger("repro.checkpoint.store")
+
+__all__ = ["CheckpointManager", "save_spec_state", "restore_spec_state"]
+
+
+# -- specialization-state persistence ------------------------------------------
+
+def _encode_config(cfg: dict) -> dict:
+    from repro.core.points import DISABLED
+    out: dict[str, Any] = {}
+    for k, v in cfg.items():
+        if v is DISABLED:
+            out[k] = {"__disabled__": True}
+        elif isinstance(v, (str, int, float, bool)) or v is None:
+            out[k] = v
+        else:
+            # Non-JSON payloads (arrays, callables) are recorded for
+            # debugging but not restored.
+            out[k] = {"__repr__": repr(v)}
+    return out
+
+
+def _decode_config(cfg: dict) -> dict:
+    from repro.core.points import DISABLED
+    out: dict[str, Any] = {}
+    for k, v in cfg.items():
+        if isinstance(v, dict):
+            if v.get("__disabled__"):
+                out[k] = DISABLED
+            continue                    # unrestorable payload: skip
+        out[k] = v
+    return out
+
+
+def save_spec_state(path: str, runtime: Any) -> None:
+    """Persist each handler's active configuration (atomic write)."""
+    state = {name: _encode_config(cfg)
+             for name, cfg in runtime.spec_state().items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".tmp_spec_")
+    with os.fdopen(fd, "w") as f:
+        json.dump(state, f, indent=1)
+    os.replace(tmp, path)
+
+
+def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
+    """Re-apply persisted per-handler configurations; best-effort.
+
+    Combined with a warm variant cache this brings every handler back to
+    its tuned config with zero recompiles.  Returns True if state was
+    applied.
+    """
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (OSError, ValueError) as e:
+        logger.warning("spec state %s unreadable (%s); starting generic",
+                       path, e)
+        return False
+    applied = False
+    for name, cfg in state.items():
+        handler = runtime.handlers.get(name)
+        if handler is None:
+            continue
+        decoded = _decode_config(cfg)
+        try:
+            handler.specialize(decoded, wait=wait)
+            applied = True
+        except Exception as e:
+            # Best-effort by contract: a stale config (points renamed,
+            # builder changed, cross-host payloads) must degrade to the
+            # generic variant, never crash startup.
+            logger.warning("spec state for handler %r no longer valid "
+                           "(%s: %s); keeping generic", name,
+                           type(e).__name__, e)
+    return applied
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
@@ -47,6 +132,29 @@ class CheckpointManager:
         self._pool = (concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="ckpt") if async_save else None)
         self._pending: concurrent.futures.Future | None = None
+
+    # -- specialization state ---------------------------------------------------
+    @property
+    def variant_cache_dir(self) -> str:
+        """Canonical location for the persistent variant cache."""
+        return os.path.join(self.directory, "variants")
+
+    def variant_cache(self):
+        """A :class:`~repro.core.variant_cache.VariantCache` rooted next to
+        the checkpoints — pass it to ``IridescentRuntime`` so AOT
+        executables survive restarts alongside the model state."""
+        from repro.core.variant_cache import VariantCache
+        return VariantCache(self.variant_cache_dir)
+
+    @property
+    def spec_state_path(self) -> str:
+        return os.path.join(self.directory, "spec_state.json")
+
+    def save_spec_state(self, runtime: Any) -> None:
+        save_spec_state(self.spec_state_path, runtime)
+
+    def restore_spec_state(self, runtime: Any, wait: bool = False) -> bool:
+        return restore_spec_state(self.spec_state_path, runtime, wait=wait)
 
     # -- save ------------------------------------------------------------------
     def _write(self, step: int, flat: dict[str, np.ndarray],

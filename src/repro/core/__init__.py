@@ -25,20 +25,25 @@ from repro.core.points import (DISABLED, AssumePoint, Config, CustomPoint,
                                SpecSpace, cartesian, config_key)
 from repro.core.specializer import (SpecCtx, Specialized, discover_space,
                                     specialize_builder)
+from repro.core.compile_service import (CompileService, PRIORITY_ACTIVATE,
+                                        PRIORITY_SPECULATIVE)
+from repro.core.variant_cache import VariantCache
 from repro.core.runtime import Handler, IridescentRuntime, Variant
 from repro.core.policy import (CoordinateDescent, EpsilonGreedy,
                                ExhaustiveSweep, Explorer, Phase, Policy,
                                SuccessiveHalving)
-from repro.core.metrics import (ChangeDetector, EWMA, StepTimer,
-                                ThroughputCounter)
+from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
+                                StepTimer, ThroughputCounter)
 from repro.core import fastpath, guards, instrumentation
 
 __all__ = [
     "DISABLED", "AssumePoint", "Config", "CustomPoint", "EnumPoint",
     "GenericPoint", "RangePoint", "SpecPoint", "SpecSpace", "cartesian",
     "config_key", "SpecCtx", "Specialized", "discover_space",
-    "specialize_builder", "Handler", "IridescentRuntime", "Variant",
-    "CoordinateDescent", "EpsilonGreedy", "ExhaustiveSweep", "Explorer",
-    "Phase", "Policy", "SuccessiveHalving", "ChangeDetector", "EWMA",
-    "StepTimer", "ThroughputCounter", "fastpath", "guards", "instrumentation",
+    "specialize_builder", "CompileService", "PRIORITY_ACTIVATE",
+    "PRIORITY_SPECULATIVE", "VariantCache", "Handler", "IridescentRuntime",
+    "Variant", "CoordinateDescent", "EpsilonGreedy", "ExhaustiveSweep",
+    "Explorer", "Phase", "Policy", "SuccessiveHalving", "AtomicCounter",
+    "ChangeDetector", "EWMA", "StepTimer", "ThroughputCounter", "fastpath",
+    "guards", "instrumentation",
 ]

@@ -8,12 +8,43 @@ produce that scalar.
 from __future__ import annotations
 
 import collections
+import itertools
 import math
 import threading
 import time
 from typing import Deque
 
-__all__ = ["ThroughputCounter", "EWMA", "ChangeDetector", "StepTimer"]
+__all__ = ["AtomicCounter", "ThroughputCounter", "EWMA", "ChangeDetector",
+           "StepTimer"]
+
+
+class AtomicCounter:
+    """Lock-free monotonic counter.
+
+    ``itertools.count.__next__`` increments in C, so a ``bump()`` is atomic
+    under the GIL without taking a lock — the dispatch fast path and the
+    async compile workers can all bump concurrently with no lost updates
+    and no contention.  ``value()`` is exact (the count iterator exposes its
+    next value through the pickle protocol).
+    """
+
+    __slots__ = ("_it",)
+
+    def __init__(self):
+        self._it = itertools.count()
+
+    def bump(self) -> None:
+        next(self._it)
+
+    def value(self) -> int:
+        # __reduce__ returns (count, (next_value,)); next_value == #bumps.
+        return self._it.__reduce__()[1][0]
+
+    def __int__(self) -> int:
+        return self.value()
+
+    def __repr__(self) -> str:
+        return f"AtomicCounter({self.value()})"
 
 
 class ThroughputCounter:
@@ -21,32 +52,39 @@ class ThroughputCounter:
 
     The fixed code bumps it once per processed request/step/token
     (paper Fig 2b ``tput_counter++``); the policy reads & resets it.
+    ``add(1)`` is lock-free (an :class:`AtomicCounter` bump) so it is safe
+    on the dispatch fast path; only the rare policy-side ``reset``/``read``
+    take the lock.
     """
 
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
         self._lock = threading.Lock()
-        self._count = 0
+        self._counter = AtomicCounter()
+        self._base = 0
         self._start = self._clock()
 
     def add(self, n: int = 1) -> None:
-        with self._lock:
-            self._count += n
+        self._counter.bump()          # lock-free fast path (n == 1)
+        if n != 1:
+            with self._lock:          # rare bulk add: O(1) base adjustment
+                self._base -= n - 1
 
     def reset(self) -> None:
         with self._lock:
-            self._count = 0
+            self._base = self._counter.value()
             self._start = self._clock()
 
     def read(self) -> float:
         """Events/sec since last reset."""
         with self._lock:
             dt = self._clock() - self._start
-            return self._count / dt if dt > 0 else 0.0
+            n = self._counter.value() - self._base
+            return n / dt if dt > 0 else 0.0
 
     def count(self) -> int:
         with self._lock:
-            return self._count
+            return self._counter.value() - self._base
 
 
 class EWMA:

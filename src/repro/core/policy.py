@@ -47,6 +47,17 @@ class Policy:
     def propose(self) -> dict | None:
         raise NotImplementedError
 
+    def peek(self, n: int = 1) -> list[dict]:
+        """Up to ``n`` upcoming candidates *without* consuming them.
+
+        The Explorer hands these to ``Handler.prefetch`` so the compile
+        pipeline builds them speculatively while the current candidate is
+        still dwelling (paper §6.4: compilation off the critical path).
+        Policies whose next proposal depends on unobserved metrics may
+        return fewer than ``n`` (or none).
+        """
+        return []
+
     def observe(self, config: Config, metric: float) -> None:
         raise NotImplementedError
 
@@ -91,6 +102,9 @@ class ExhaustiveSweep(Policy):
 
     def propose(self) -> dict | None:
         return self._queue.pop(0) if self._queue else None
+
+    def peek(self, n: int = 1) -> list[dict]:
+        return [dict(c) for c in self._queue[:n]]
 
     def observe(self, config: Config, metric: float) -> None:
         self._board.observe(config, metric)
@@ -172,6 +186,11 @@ class CoordinateDescent(Policy):
                 return None
         return self._axis_q.pop(0)
 
+    def peek(self, n: int = 1) -> list[dict]:
+        # Only the remainder of the current axis is metric-independent; the
+        # next axis re-pins to whatever incumbent wins this one.
+        return [dict(c) for c in self._axis_q[:n]]
+
     def observe(self, config: Config, metric: float) -> None:
         self._board.observe(config, metric)
         if metric > self._incumbent_metric * (1 + self.rel_tol):
@@ -208,6 +227,9 @@ class EpsilonGreedy(Policy):
         cfg, _ = self._board.best()
         return dict(cfg) if cfg is not None else None
 
+    def peek(self, n: int = 1) -> list[dict]:
+        return [dict(c) for c in self._unseen[:n]]
+
     def observe(self, config: Config, metric: float) -> None:
         self._board.observe(config, metric)
 
@@ -241,6 +263,11 @@ class SuccessiveHalving(Policy):
                 return None
             self._queue = [dict(c) for c in self._survivors]
         return self._queue.pop(0)
+
+    def peek(self, n: int = 1) -> list[dict]:
+        # Within a rung the measurement order is fixed; across rungs the
+        # survivors depend on scores, so peeking stops at the rung edge.
+        return [dict(c) for c in self._queue[:n]]
 
     def observe(self, config: Config, metric: float) -> None:
         self._board.observe(config, metric)
@@ -280,6 +307,8 @@ class Explorer:
         on_instrumented: Callable[["Explorer"], None] | None = None,
         wait_compiles: bool = True,
         skip_dwell_after_swap: int = 1,
+        prefetch: int = 2,
+        initial_config: Mapping[str, Any] | None = None,
     ):
         self.handler = handler
         self.policy = policy
@@ -292,13 +321,26 @@ class Explorer:
         self.on_instrumented = on_instrumented
         self.wait_compiles = wait_compiles
         self.skip_dwell_after_swap = skip_dwell_after_swap
+        #: speculatively compile the next N policy candidates while the
+        #: current one dwells (paper §6.4: off-critical-path compilation);
+        #: ignored by synchronous runtimes (no pipeline to overlap with).
+        self.prefetch = max(0, int(prefetch))
 
         self.phase = Phase.INSTRUMENT if instrument_iters > 0 else Phase.EXPLORE
         self._iters = 0
         self._pending: dict | None = None
         self._explorations = 0
         self.history: list[tuple[Phase, dict | None, float]] = []
-        if self.phase is Phase.INSTRUMENT:
+        if initial_config is not None:
+            # A previous run already paid for the search (e.g. restored
+            # spec state + warm variant cache): start exploiting its winner
+            # and let the ChangeDetector trigger re-exploration if the
+            # workload has shifted since.
+            self._pending = dict(initial_config)
+            self.handler.specialize(self._pending, wait=self.wait_compiles)
+            self.phase = Phase.EXPLOIT
+            self.handler.tput.reset()
+        elif self.phase is Phase.INSTRUMENT:
             self.handler.enable_instrumentation(rate=instrument_rate,
                                                 collectors=self.collectors)
         else:
@@ -311,12 +353,19 @@ class Explorer:
             best, metric = self.policy.best()
             if best is not None:
                 self.handler.specialize(best, wait=self.wait_compiles)
+            # Entering EXPLOIT: any still-queued speculative builds are for
+            # candidates the policy has moved past — cancel them.
+            self.handler.prefetch(())
             self.phase = Phase.EXPLOIT
             self._pending = dict(best) if best is not None else None
             logger.info("explorer: exploiting %s (metric=%.3f)", best, metric)
         else:
             self._pending = dict(cfg)
             self.handler.specialize(cfg, wait=self.wait_compiles)
+            if self.prefetch:
+                # Overlap this candidate's dwell window with the builds of
+                # the next ones (speculative pipeline).
+                self.handler.prefetch(self.policy.peek(self.prefetch))
             self.phase = Phase.EXPLORE
         self.handler.tput.reset()
         self._iters = 0

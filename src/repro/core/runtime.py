@@ -3,36 +3,46 @@
 Components, mapped from the paper:
 
 * **JIT** — ``jax.jit``.  Each specialized variant is lowered + compiled
-  **off the critical path** in a background executor (paper §6.4:
-  "this compilation happens off the critical path"), using the argument
-  shapes observed at the handler's previous calls.
+  **off the critical path** (paper §6.4: "this compilation happens off the
+  critical path") by the :class:`~repro.core.compile_service.CompileService`:
+  a priority-queued, deduplicating, cancellable multi-worker build pipeline.
+  Policies may *speculatively* enqueue upcoming candidates so dwell windows
+  overlap compilation instead of serializing with it.
 * **Trampoline** — :class:`Handler` is a stable callable the fixed code
-  obtains once (``runtime.handler(name)``); it always dispatches to the most
-  recent specialized variant, and *atomically* swaps variants when a new one
-  finishes compiling.
+  obtains once (``runtime.handler(name)``).  Dispatch state — the active
+  variant, the generic fallback, and the pre-bound guard check — lives in
+  one immutable :class:`_Snapshot` swapped atomically by reference, so the
+  per-call fast path takes **no locks**: one attribute read, one optional
+  lock-free counter bump, then the compiled executable.  Guard checks are
+  skipped entirely for guardless variants.
 * **Guards** — before dispatching to a specialized variant the trampoline
-  evaluates the variant's host-side guards against the actual arguments; on
-  failure it transparently re-routes to the generic variant (the paper's
-  exception-unwind path, minus the exception: JAX handlers are functional so
-  there are no side effects to roll back).
-* **Variant cache** — compiled variants are cached by configuration, so
-  re-selecting a previously explored configuration is instant.
+  evaluates the variant's pre-bound guard closure against the actual
+  arguments; on failure it transparently re-routes to the generic variant
+  (the paper's exception-unwind path, minus the exception: JAX handlers are
+  functional so there are no side effects to roll back).
+* **Variant cache** — compiled variants are cached by configuration in
+  memory, and — when the runtime is given a
+  :class:`~repro.core.variant_cache.VariantCache` — their AOT executables
+  persist on disk across process restarts, so a warm restart reaches its
+  tuned configuration with zero recompiles.
 """
 from __future__ import annotations
 
 import concurrent.futures
-import dataclasses
 import logging
 import threading
 import time
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import jax
 
 from repro.core import instrumentation as instr_mod
-from repro.core.metrics import ThroughputCounter
+from repro.core.compile_service import (CompileService, PRIORITY_ACTIVATE,
+                                        PRIORITY_SPECULATIVE)
+from repro.core.metrics import AtomicCounter, ThroughputCounter
 from repro.core.points import Config, SpecSpace, config_key
 from repro.core.specializer import Specialized, specialize_builder
+from repro.core.variant_cache import VariantCache, spec_fingerprint
 
 logger = logging.getLogger("repro.core.runtime")
 
@@ -47,29 +57,106 @@ def _abstractify(x: Any) -> Any:
     return x
 
 
-@dataclasses.dataclass
+#: Exceptions the AOT-compiled path may raise on a *transient* argument /
+#: placement mismatch (XlaRuntimeError subclasses RuntimeError).  Anything
+#: else propagates: it is a real error in the computation, not a reason to
+#: silently fall back to the jit path.
+_AOT_FALLBACK_ERRORS = (TypeError, ValueError, RuntimeError)
+
+#: consecutive AOT failures before a variant demotes itself to the jit path
+_AOT_DEMOTE_AFTER = 3
+
+
 class Variant:
     """One specialized, (possibly) compiled version of a handler."""
 
-    specialized: Specialized
-    jitted: Callable
-    compiled: Any = None          # result of .lower().compile(), if available
-    compile_time_s: float | None = None
-    calls: int = 0
-    guard_misses: int = 0
+    __slots__ = ("specialized", "jitted", "compiled", "compile_time_s",
+                 "build_time_s", "from_cache", "_calls", "_guard_misses",
+                 "_aot_failures", "_aot_warned")
+
+    def __init__(self, specialized: Specialized, jitted: Callable):
+        self.specialized = specialized
+        self.jitted = jitted
+        self.compiled: Any = None      # AOT executable, if available
+        self.compile_time_s: float | None = None
+        self.build_time_s: float | None = None
+        self.from_cache = False        # AOT executable came from disk
+        self._calls = AtomicCounter()
+        self._guard_misses = AtomicCounter()
+        self._aot_failures = 0
+        self._aot_warned = False
 
     @property
     def config(self) -> dict:
         return self.specialized.config
 
+    @property
+    def calls(self) -> int:
+        return self._calls.value()
+
+    @property
+    def guard_misses(self) -> int:
+        return self._guard_misses.value()
+
     def call(self, *args, **kwargs):
-        self.calls += 1
-        if self.compiled is not None and not kwargs:
+        self._calls.bump()
+        compiled = self.compiled
+        if compiled is not None and not kwargs:
             try:
-                return self.compiled(*args)
-            except Exception:      # layout/placement mismatch: fall back to jit
-                self.compiled = None
+                out = compiled(*args)
+                if self._aot_failures:
+                    self._aot_failures = 0     # transient blip has passed
+                return out
+            except _AOT_FALLBACK_ERRORS as e:
+                self._note_aot_failure(e)
         return self.jitted(*args, **kwargs)
+
+    def _note_aot_failure(self, e: BaseException) -> None:
+        """A transient failure falls back to jit for this call only; the
+        variant demotes (drops its AOT path) only after
+        ``_AOT_DEMOTE_AFTER`` consecutive failures."""
+        self._aot_failures += 1
+        if not self._aot_warned:
+            self._aot_warned = True
+            logger.warning(
+                "AOT path failed for config %s (%s: %s); falling back to "
+                "jit for this call", self.config, type(e).__name__, e)
+        if self._aot_failures >= _AOT_DEMOTE_AFTER:
+            logger.warning(
+                "AOT path failed %d consecutive times for config %s; "
+                "demoting variant to the jit path", self._aot_failures,
+                self.config)
+            self.compiled = None
+
+
+class _Snapshot:
+    """Immutable dispatch state, swapped atomically by reference.
+
+    Everything ``Handler.__call__`` needs is resolved once, here, at swap
+    time: the active variant, the generic fallback, the pre-bound composite
+    guard (``None`` for guardless variants), whether host-side sampling is
+    on, and — when none of the slow-path features apply — the bound
+    ``variant.call`` to jump straight to.
+    """
+
+    __slots__ = ("variant", "generic", "guard_fn", "sample", "fast")
+
+    def __init__(self, variant: Variant, generic: Variant,
+                 instr_rate: float):
+        self.variant = variant
+        self.generic = generic
+        self.guard_fn = (variant.specialized.guard_fn
+                         if variant is not generic else None)
+        self.sample = instr_rate > 0.0
+        self.fast = (variant.call
+                     if self.guard_fn is None and not self.sample
+                     and not variant.specialized.instrumented else None)
+
+
+def _done_future(value: Any) -> concurrent.futures.Future:
+    fut: concurrent.futures.Future = concurrent.futures.Future()
+    fut.set_result(value)
+    return fut
 
 
 class Handler:
@@ -94,20 +181,28 @@ class Handler:
         self._lock = threading.Lock()
         self._variants: dict[tuple, Variant] = {}
         self._active_key: tuple | None = None
-        self._generic_key: tuple | None = None
+        self._generic_key: tuple = (config_key({}), False)
         self._arg_specs: tuple | None = None   # (abstract args, kwargs)
+        self._need_arg_specs = True
+        self._activate_epoch = 0               # supersedes stale activations
+        self._snapshot: _Snapshot | None = None
         self.space: SpecSpace = SpecSpace()
         self.tput = ThroughputCounter()
+        self.count_calls = True                # bump tput on every dispatch
         self.recorders = instr_mod.RecorderSet()
         self._instr_rate = 0.0
-        #: most recent host-side guard misses (all variants)
-        self.guard_misses = 0
+        self._guard_miss_counter = AtomicCounter()
         # Build the generic variant eagerly so dispatch always has a fallback.
         self._install({}, wait=True, activate=True)
-        self._generic_key = self._active_key
+
+    @property
+    def guard_misses(self) -> int:
+        """Host-side guard misses across all variants (lock-free counter)."""
+        return self._guard_miss_counter.value()
 
     # -- construction of variants ---------------------------------------------
     def _build_variant(self, config: Config, instrument: bool) -> Variant:
+        t0 = time.perf_counter()
         spec = specialize_builder(
             self.builder,
             config,
@@ -116,55 +211,146 @@ class Handler:
             guards_enabled=self.runtime.guards_enabled,
         )
         self.space = spec.space if len(spec.space) >= len(self.space) else self.space
-        jit_kwargs = dict(self.jit_kwargs)
-        jit_kwargs.update(self.runtime.jit_overrides)
+        jit_kwargs = self._all_jit_kwargs()
         jitted = jax.jit(spec.fn, **jit_kwargs)
-        return Variant(specialized=spec, jitted=jitted)
+        variant = Variant(specialized=spec, jitted=jitted)
+        variant.build_time_s = time.perf_counter() - t0
+        return variant
+
+    def _all_jit_kwargs(self) -> dict:
+        kw = dict(self.jit_kwargs)
+        kw.update(self.runtime.jit_overrides)
+        return kw
+
+    def _cache_key(self, variant: Variant) -> str | None:
+        cache = self.runtime.variant_cache
+        if cache is None or self._arg_specs is None:
+            return None
+        args, kwargs = self._arg_specs
+        return cache.entry_key(
+            self.name, config_key(variant.config),
+            variant.specialized.instrumented, self._all_jit_kwargs(),
+            spec_fingerprint(args, kwargs))
+
+    def _try_cache_load(self, variant: Variant) -> bool:
+        """Probe the persistent cache; on hit, install the AOT executable
+        without any XLA compile."""
+        key = self._cache_key(variant)
+        if key is None:
+            return False
+        t0 = time.perf_counter()
+        compiled = self.runtime.variant_cache.load(key)
+        if compiled is None:
+            return False
+        variant.compiled = compiled
+        variant.compile_time_s = time.perf_counter() - t0
+        variant.from_cache = True
+        self.runtime.compile_service.note_compile(None, cache_hit=True)
+        return True
 
     def _compile_variant(self, variant: Variant) -> None:
-        """AOT-compile against the last observed argument shapes."""
+        """AOT-compile against the last observed argument shapes, consulting
+        the persistent variant cache first."""
         if self._arg_specs is None:
             return  # no calls yet: compile lazily at first dispatch
+        if variant.compiled is not None:
+            return
+        if self._try_cache_load(variant):
+            return
         args, kwargs = self._arg_specs
         t0 = time.perf_counter()
         try:
             lowered = variant.jitted.lower(*args, **kwargs)
             variant.compiled = lowered.compile()
             variant.compile_time_s = time.perf_counter() - t0
+            self.runtime.compile_service.note_compile(
+                variant.compile_time_s, cache_hit=False,
+                build_s=variant.build_time_s)
+            cache_key = self._cache_key(variant)
+            if cache_key is not None:
+                self.runtime.variant_cache.store(
+                    cache_key, variant.compiled,
+                    meta={"handler": self.name,
+                          "config": {k: repr(v)
+                                     for k, v in variant.config.items()}})
         except Exception as e:  # pragma: no cover - defensive
             logger.warning("AOT compile failed for %s %s: %s",
                            self.name, variant.config, e)
             variant.compiled = None
             variant.compile_time_s = time.perf_counter() - t0
 
+    # -- snapshot publication ---------------------------------------------------
+    def _rebuild_snapshot_locked(self) -> None:
+        variant = self._variants[self._active_key]
+        generic = self._variants[self._generic_key]
+        self._snapshot = _Snapshot(variant, generic, self._instr_rate)
+
+    def _publish(self, key: tuple, epoch: int | None) -> None:
+        """Atomically swap the dispatch snapshot — unless a newer activation
+        (or despecialize) has superseded this one."""
+        with self._lock:
+            if epoch is not None and epoch != self._activate_epoch:
+                return
+            if key not in self._variants:
+                return
+            self._active_key = key
+            self._rebuild_snapshot_locked()
+
+    def _next_epoch(self) -> int:
+        with self._lock:
+            self._activate_epoch += 1
+            return self._activate_epoch
+
+    # -- install / compile pipeline ---------------------------------------------
     def _install(self, config: Config, wait: bool, activate: bool,
-                 instrument: bool = False) -> "concurrent.futures.Future | None":
+                 instrument: bool = False,
+                 speculative: bool = False) -> concurrent.futures.Future:
         key = (config_key(config), bool(instrument))
+        epoch = self._next_epoch() if activate else None
         with self._lock:
             existing = self._variants.get(key)
+        svc = self.runtime.compile_service
+        if activate:
+            # The policy has moved past any still-queued activation for a
+            # different config: cancel before a worker wastes a compile.
+            svc.cancel_pending(self.name, keep_keys={key},
+                               max_priority=PRIORITY_ACTIVATE)
         if existing is not None:
             if activate:
-                with self._lock:
-                    self._active_key = key
-            fut: concurrent.futures.Future = concurrent.futures.Future()
-            fut.set_result(existing)
-            return fut
+                self._publish(key, epoch)
+            return _done_future(existing)
 
-        def work() -> Variant:
+        def build() -> Variant:
             variant = self._build_variant(config, instrument)
             self._compile_variant(variant)
             with self._lock:
-                self._variants[key] = variant
-                if activate:
-                    self._active_key = key   # atomic swap
+                variant = self._variants.setdefault(key, variant)
             return variant
 
-        if wait or self.runtime.executor is None:
-            v = work()
-            fut = concurrent.futures.Future()
-            fut.set_result(v)
-            return fut
-        return self.runtime.executor.submit(work)
+        req = svc.submit(
+            self.name, key, dict(config), build,
+            priority=(PRIORITY_ACTIVATE if activate
+                      else PRIORITY_SPECULATIVE),
+            speculative=speculative)
+        fut = req.future
+        if activate:
+            def _on_done(f: concurrent.futures.Future) -> None:
+                if f.cancelled() or f.exception() is not None:
+                    return
+                self._publish(key, epoch)
+            fut.add_done_callback(_on_done)
+        if wait and not fut.cancelled():
+            try:
+                fut.result()
+            except concurrent.futures.CancelledError:
+                pass
+            else:
+                if activate:
+                    # Worker-side done-callbacks may still be in flight;
+                    # publishing here (idempotent) guarantees the swap is
+                    # visible when a wait=True caller returns.
+                    self._publish(key, epoch)
+        return fut
 
     # -- paper policy API ------------------------------------------------------
     def specialize(self, config: Config, wait: bool = False,
@@ -177,10 +363,46 @@ class Handler:
         self.space.validate({k: v for k, v in config.items() if k in self.space})
         self._install(config, wait=wait, activate=True, instrument=instrument)
 
+    def prefetch(self, configs: Iterable[Config]) -> int:
+        """Speculatively enqueue builds for upcoming candidates (paper §6.4:
+        overlap dwell windows with compilation).  Pending speculative builds
+        for configs *not* in the new set are cancelled — the policy has
+        moved past them.  Returns the number of builds enqueued."""
+        keep_keys: set = set()
+        enqueued = 0
+        for cfg in configs:
+            try:
+                self.space.validate(
+                    {k: v for k, v in cfg.items() if k in self.space})
+            except (KeyError, ValueError):
+                continue
+            key = (config_key(cfg), False)
+            keep_keys.add(key)
+            with self._lock:
+                if key in self._variants:
+                    continue
+            fut = self._install(cfg, wait=False, activate=False,
+                                speculative=True)
+            if not fut.cancelled():      # sync runtimes skip speculation
+                enqueued += 1
+        self.runtime.compile_service.cancel_pending(
+            self.name, keep_keys=keep_keys, speculative_only=True)
+        return enqueued
+
     def despecialize(self, wait: bool = True) -> None:
-        """Return to the generic variant."""
-        with self._lock:
-            self._active_key = self._generic_key
+        """Return to the generic variant.
+
+        Pending (not yet started) builds for this handler are cancelled and
+        any in-flight activation is superseded, so a compile finishing later
+        can no longer overwrite the generic swap.  With ``wait=True`` this
+        additionally blocks until in-flight builds for this handler have
+        drained — on return, no background compile work remains for it.
+        """
+        epoch = self._next_epoch()
+        self.runtime.compile_service.cancel_pending(self.name)
+        self._publish(self._generic_key, epoch)
+        if wait:
+            self.runtime.compile_service.drain(self.name)
 
     def enable_instrumentation(self, rate: float = 1.0,
                                collectors: Mapping[str, Callable] | None = None,
@@ -195,15 +417,16 @@ class Handler:
         for label, fn in (collectors or {}).items():
             self.recorders.add_host(label, fn, rate)
         with self._lock:
-            active = self._variants.get(self._active_key)
-        cfg = active.config if active is not None else {}
+            cfg = dict(self._snapshot.variant.config)
+            self._rebuild_snapshot_locked()   # sampling starts immediately
         self._install(cfg, wait=wait, activate=True, instrument=True)
 
     def disable_instrumentation(self) -> None:
         self._instr_rate = 0.0
         with self._lock:
-            active = self._variants.get(self._active_key)
-        if active is not None and active.specialized.instrumented:
+            active = self._snapshot.variant
+            self._rebuild_snapshot_locked()
+        if active.specialized.instrumented:
             self._install(active.config, wait=True, activate=True,
                           instrument=False)
 
@@ -216,9 +439,8 @@ class Handler:
 
     # -- stats -----------------------------------------------------------------
     def active_config(self) -> dict:
-        with self._lock:
-            v = self._variants.get(self._active_key)
-        return dict(v.config) if v else {}
+        snap = self._snapshot
+        return dict(snap.variant.config) if snap is not None else {}
 
     def variants(self) -> list[Variant]:
         with self._lock:
@@ -227,36 +449,85 @@ class Handler:
     def stats(self) -> dict:
         with self._lock:
             vs = list(self._variants.items())
+            active = (self._variants.get(self._active_key)
+                      if self._active_key is not None else None)
         return {
             "variants": len(vs),
             "guard_misses": self.guard_misses,
-            "active": dict(self._variants[self._active_key].config)
-            if self._active_key in self._variants else None,
+            "active": dict(active.config) if active is not None else None,
+            "aot_compiled": sum(1 for _, v in vs if v.compiled is not None),
+            "from_cache": sum(1 for _, v in vs if v.from_cache),
             "compile_times_s": {
                 str(dict(k[0])): v.compile_time_s for k, v in vs
                 if v.compile_time_s is not None
             },
         }
 
-    # -- the trampoline itself ---------------------------------------------------
-    def __call__(self, *args, **kwargs):
+    # -- argument-spec capture (once, then the flag stays down) -----------------
+    def _capture_arg_specs(self, args: tuple, kwargs: dict) -> None:
         with self._lock:
-            variant = self._variants[self._active_key]
-            generic = self._variants[self._generic_key]
-        # Record argument specs so future variants AOT-compile off-path.
-        if self._arg_specs is None:
+            if not self._need_arg_specs:
+                return
             self._arg_specs = (
                 jax.tree_util.tree_map(_abstractify, args),
                 jax.tree_util.tree_map(_abstractify, kwargs),
             )
+            self._need_arg_specs = False
+            items = list(self._variants.items())
+            active_key = self._active_key
+        # Now that shapes are known: probe the persistent cache for every
+        # installed-but-uncompiled variant (a warm restart hits here and
+        # reaches its AOT executables with zero recompiles), then schedule
+        # background AOT builds for the remainder.
+        svc = self.runtime.compile_service
+        for key, variant in items:
+            if variant.compiled is not None:
+                continue
+            if self._try_cache_load(variant):
+                continue
+
+            def build(v: Variant = variant) -> Variant:
+                self._compile_variant(v)
+                return v
+
+            # Non-active variants are speculative backfills: a synchronous
+            # runtime (workers=0) skips them rather than stalling this
+            # first dispatch on their compiles.
+            svc.submit(self.name, key, dict(variant.config), build,
+                       priority=(PRIORITY_ACTIVATE if key == active_key
+                                 else PRIORITY_SPECULATIVE),
+                       speculative=key != active_key)
+        with self._lock:
+            self._rebuild_snapshot_locked()
+
+    # -- the trampoline itself ---------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        # Lock-free fast path: one snapshot reference read; guardless,
+        # uninstrumented variants dispatch straight to the compiled
+        # executable.  All remaining bookkeeping is either lock-free
+        # (AtomicCounter bumps) or disabled.
+        snap = self._snapshot
+        if snap.fast is not None and not self._need_arg_specs:
+            if self.count_calls:
+                self.tput.add()
+            return snap.fast(*args, **kwargs)
+        return self._call_slow(snap, args, kwargs)
+
+    def _call_slow(self, snap: _Snapshot, args: tuple, kwargs: dict):
+        if self._need_arg_specs:
+            # Record argument specs so variants AOT-compile off-path (and
+            # warm restarts can load their cached executables).
+            self._capture_arg_specs(args, kwargs)
+            snap = self._snapshot
+        variant = snap.variant
         # Host-side specialization guards (paper §4.4.3): on miss, fall back
         # to the generic variant for this invocation.
-        if variant is not generic and not variant.specialized.check_guards(args, kwargs):
-            variant.guard_misses += 1
-            self.guard_misses += 1
-            variant = generic
+        if snap.guard_fn is not None and not snap.guard_fn(args, kwargs):
+            variant._guard_misses.bump()
+            self._guard_miss_counter.bump()
+            variant = snap.generic
         # Host-side instrumentation sampling.
-        if self._instr_rate > 0.0:
+        if snap.sample:
             self.recorders.maybe_record(args, kwargs)
         out = variant.call(*args, **kwargs)
         # In-graph instrumentation taps come back as (out, taps).
@@ -264,24 +535,26 @@ class Handler:
                 isinstance(out, tuple) and len(out) == 2 and isinstance(out[1], dict):
             out, taps = out
             self.recorders.absorb_taps(taps)
-        self.tput.add()
+        if self.count_calls:
+            self.tput.add()
         return out
 
 
 class IridescentRuntime:
     """Paper Table 2 policy API: the object the *fixed code* talks to."""
 
-    def __init__(self, max_compile_workers: int = 1, async_compile: bool = True,
-                 guards_enabled: bool = True):
+    def __init__(self, max_compile_workers: int = 2, async_compile: bool = True,
+                 guards_enabled: bool = True,
+                 variant_cache: "VariantCache | str | None" = None):
         self.handlers: dict[str, Handler] = {}
         self.custom_generators: dict[str, Callable] = {}
         self.jit_overrides: dict[str, Any] = {}
         self.guards_enabled = guards_enabled
-        self.executor = (
-            concurrent.futures.ThreadPoolExecutor(
-                max_workers=max_compile_workers,
-                thread_name_prefix="iridescent-jit")
-            if async_compile else None)
+        if isinstance(variant_cache, str):
+            variant_cache = VariantCache(variant_cache)
+        self.variant_cache = variant_cache
+        self.compile_service = CompileService(
+            workers=max_compile_workers if async_compile else 0)
 
     # -- registration ----------------------------------------------------------
     def register(self, name: str, builder: Callable,
@@ -335,6 +608,18 @@ class IridescentRuntime:
             sub = {k: v for k, v in config.items() if k in h.spec_space()}
             h.specialize(sub, wait=wait)
 
+    # -- persistence & telemetry -------------------------------------------------
+    def spec_state(self) -> dict:
+        """Active configuration per handler (repr-serializable only when
+        configs are; the launch drivers persist this next to checkpoints)."""
+        return {name: h.active_config() for name, h in self.handlers.items()}
+
+    def compile_stats(self) -> dict:
+        """Aggregate compile telemetry: service counters + cache stats."""
+        out = self.compile_service.stats()
+        if self.variant_cache is not None:
+            out["cache"] = self.variant_cache.stats.as_dict()
+        return out
+
     def shutdown(self) -> None:
-        if self.executor is not None:
-            self.executor.shutdown(wait=True)
+        self.compile_service.shutdown(wait=True)

@@ -50,6 +50,23 @@ class _BoundGuard:
         return bool(self.predicate(args, kwargs, self.value))
 
 
+def _compose_guards(guards: Sequence[_BoundGuard]) -> Callable | None:
+    """Pre-bind guards into one ``(args, kwargs) -> bool`` closure.
+
+    Binding the predicate/value pairs once at specialize time keeps the
+    trampoline's dispatch path free of per-call attribute walks over the
+    guard list; ``None`` means the variant is guardless and the trampoline
+    may skip the check entirely.
+    """
+    if not guards:
+        return None
+    if len(guards) == 1:
+        pred, value = guards[0].predicate, guards[0].value
+        return lambda args, kwargs: bool(pred(args, kwargs, value))
+    bound = tuple((g.predicate, g.value) for g in guards)
+    return lambda args, kwargs: all(p(args, kwargs, v) for p, v in bound)
+
+
 @dataclasses.dataclass
 class Specialized:
     """Result of specializing a builder for one configuration."""
@@ -61,9 +78,13 @@ class Specialized:
     instrumented: bool
     #: labels of points that were enabled in this variant
     enabled: list[str]
+    #: pre-bound composite guard; None iff the variant is guardless
+    guard_fn: Callable[[tuple, dict], bool] | None = None
 
     def check_guards(self, args: tuple, kwargs: dict) -> bool:
         """True iff every guard passes (specialized variant is applicable)."""
+        if self.guard_fn is not None:
+            return self.guard_fn(args, kwargs)
         return all(g.check(args, kwargs) for g in self.guards)
 
 
@@ -198,6 +219,7 @@ def specialize_builder(
         guards=list(ctx.guards),
         instrumented=instrument,
         enabled=list(ctx.enabled),
+        guard_fn=_compose_guards(ctx.guards),
     )
 
 

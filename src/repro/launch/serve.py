@@ -8,10 +8,17 @@ The server decodes token batches against a KV cache; the Iridescent policy
 explores decode spec points (cache dtype, chunk length for recurrent archs)
 guided by measured tokens/s and re-explores when the request distribution
 shifts.
+
+With ``--cache-dir`` the runtime persists every variant's AOT executable
+(and the tuned configuration) across restarts: a warm restart loads its
+serialized executables instead of recompiling — ``compile_stats()`` on the
+second run reports ``xla_compiles == 0`` for previously seen configs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -19,8 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.checkpoint import restore_spec_state, save_spec_state
 from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
-                        IridescentRuntime)
+                        IridescentRuntime, Phase)
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
 from repro.training import make_decode_builder
@@ -33,10 +41,21 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--dwell", type=int, default=20)
+    ap.add_argument("--compile-workers", type=int, default=2,
+                    help="CompileService worker threads")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="speculative compiles ahead of the policy")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist AOT executables + tuned config here; a "
+                         "warm restart then performs zero recompiles")
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch).replace(compute_dtype="float32")
-    rt = IridescentRuntime(async_compile=True)
+    variant_cache = (os.path.join(args.cache_dir, "variants")
+                     if args.cache_dir else None)
+    rt = IridescentRuntime(async_compile=True,
+                           max_compile_workers=args.compile_workers,
+                           variant_cache=variant_cache)
     handler = rt.register(
         "serve_step", make_decode_builder(cfg, kernel_impl="xla"),
         donate_argnums=1)
@@ -45,6 +64,13 @@ def main() -> None:
     cache = model.init_cache(cfg, args.batch, args.max_len,
                              RunOptions(decode_cache_dtype="float32"))
     tokens = jnp.zeros((args.batch,), jnp.int32)
+
+    spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
+                      if args.cache_dir else None)
+    tuned_config = None
+    if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
+        tuned_config = handler.active_config()
+        print(f"restored tuned config: {tuned_config}")
 
     # decode spec points + the kernel-implementation choice (the registry
     # candidates are host-filtered, so on CPU this sweeps xla_ref vs the
@@ -55,7 +81,8 @@ def main() -> None:
         handler,
         ExhaustiveSweep.from_space(handler.spec_space(), labels),
         dwell=args.dwell, change_detector=ChangeDetector(0.3),
-        wait_compiles=False)
+        wait_compiles=False, prefetch=args.prefetch,
+        initial_config=tuned_config)
 
     t0 = time.perf_counter()
     done = 0
@@ -72,6 +99,11 @@ def main() -> None:
     print(f"served {done} tokens; variants: {len(handler.variants())}")
     best, metric = explorer.policy.best()
     print(f"best config: {best}")
+    print(f"compile stats: {json.dumps(rt.compile_stats())}")
+    # Persist the tuned config only if the explorer has settled — a
+    # mid-sweep candidate must not become the next restart's "winner".
+    if spec_state_path and explorer.phase is Phase.EXPLOIT:
+        save_spec_state(spec_state_path, rt)
     rt.shutdown()
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.core import (ChangeDetector, CoordinateDescent, Explorer,
-                        IridescentRuntime)
+                        IridescentRuntime, Phase)
 from repro.data import SyntheticLM
 from repro.models import ModelConfig
 from repro.models import transformer as model
@@ -59,6 +59,10 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--compress", default="none", choices=("none", "int8_ef"))
+    ap.add_argument("--compile-workers", type=int, default=2,
+                    help="CompileService worker threads")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="speculative compiles ahead of the policy")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch).replace(compute_dtype="float32")
@@ -68,7 +72,12 @@ def main() -> None:
     print(f"model={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"tokens/step={args.batch * args.seq}")
 
-    rt = IridescentRuntime(async_compile=True)
+    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    # The checkpoint directory doubles as the persistent variant cache: a
+    # resumed run reloads its AOT executables instead of recompiling them.
+    rt = IridescentRuntime(async_compile=True,
+                           max_compile_workers=args.compile_workers,
+                           variant_cache=mgr.variant_cache() if mgr else None)
     handler = rt.register("train_step",
                           make_train_builder(cfg, opt_cfg, kernel_impl="xla"),
                           donate_argnums=0)
@@ -76,11 +85,14 @@ def main() -> None:
     params = model.init_params(jax.random.PRNGKey(0), cfg)
     state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
     start_step = 0
-    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    tuned_config = None
     if mgr and mgr.latest_step() is not None:
         state, meta = mgr.restore(state)
         start_step = meta["step"]
         print(f"resumed from step {start_step}")
+        if mgr.restore_spec_state(rt, wait=True):
+            tuned_config = handler.active_config()
+            print(f"restored tuned config: {tuned_config}")
 
     ds = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=1,
                      start_step=start_step)
@@ -96,7 +108,8 @@ def main() -> None:
         explorer = Explorer(handler, policy, dwell=args.dwell,
                             metric_fn=lambda: handler.tput.read(),
                             change_detector=ChangeDetector(0.3),
-                            wait_compiles=False)
+                            wait_compiles=False, prefetch=args.prefetch,
+                            initial_config=tuned_config)
 
     t0 = time.perf_counter()
     for step in range(start_step, args.steps):
@@ -111,10 +124,18 @@ def main() -> None:
                   f"config={handler.active_config()}")
         if mgr and (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1, state)   # async, off critical path
+            # Persist the tuned config only once the explorer has settled:
+            # saving a mid-sweep candidate would make the next warm restart
+            # exploit an arbitrary (possibly worst) config.
+            if explorer is None or explorer.phase is Phase.EXPLOIT:
+                mgr.save_spec_state(rt)
     if mgr:
         mgr.wait()
+        if explorer is None or explorer.phase is Phase.EXPLOIT:
+            mgr.save_spec_state(rt)
     print(f"done. variants compiled: {len(handler.variants())}; "
           f"guard misses: {handler.guard_misses}")
+    print(f"compile stats: {rt.compile_stats()}")
     if explorer is not None:
         best, metric = explorer.policy.best()
         print(f"best config: {best} ({metric:.2f} steps/s)")

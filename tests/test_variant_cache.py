@@ -1,0 +1,227 @@
+"""Persistent variant cache: warm-restart round trip with zero recompiles,
+corrupted-entry fallback, and the lock-free trampoline fast path (dispatch
+overhead regression + atomic guard-miss counters)."""
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IridescentRuntime, VariantCache, guards
+
+
+def _mm_builder(spec):
+    B = spec.enum("B", 8, (4, 8, 16))
+
+    def matmul(L, R):
+        return (L @ R) * 1.0
+
+    return matmul
+
+
+def _run_once(cache_dir, specialize_cfg):
+    rt = IridescentRuntime(async_compile=False, variant_cache=cache_dir)
+    h = rt.register("m", _mm_builder)
+    out_generic = h(jnp.ones((8, 8)), jnp.eye(8))
+    h.specialize(specialize_cfg, wait=True)
+    out_spec = h(jnp.ones((8, 8)), jnp.eye(8))
+    stats = rt.compile_stats()
+    from_cache = [v.from_cache for v in h.variants()]
+    rt.shutdown()
+    return np.asarray(out_generic), np.asarray(out_spec), stats, from_cache
+
+
+def test_warm_restart_zero_recompiles(tmp_path):
+    """Acceptance: a second run with a populated cache directory performs 0
+    XLA recompiles for previously seen configs."""
+    cache_dir = str(tmp_path / "variants")
+    g1, s1, cold, _ = _run_once(cache_dir, {"B": 4})
+    assert cold["xla_compiles"] >= 2            # generic + specialized
+    assert cold["cache"]["stores"] >= 2
+    g2, s2, warm, from_cache = _run_once(cache_dir, {"B": 4})
+    assert warm["xla_compiles"] == 0            # zero recompiles on warm start
+    assert warm["cache_hits"] >= 2
+    assert all(from_cache)
+    np.testing.assert_allclose(g1, g2)
+    np.testing.assert_allclose(s1, s2)
+
+
+def test_unseen_config_still_compiles_on_warm_start(tmp_path):
+    cache_dir = str(tmp_path / "variants")
+    _run_once(cache_dir, {"B": 4})
+    _, _, stats, _ = _run_once(cache_dir, {"B": 16})   # new config
+    assert stats["cache_hits"] >= 1             # generic came from cache
+    assert stats["xla_compiles"] == 1           # only the unseen config
+
+
+def test_corrupted_entry_falls_back_to_compile(tmp_path):
+    cache_dir = str(tmp_path / "variants")
+    _run_once(cache_dir, {"B": 4})
+    cache = VariantCache(cache_dir)
+    entries = cache.entries()
+    assert entries
+    for key in entries:                          # corrupt every entry
+        with open(cache._path(key), "wb") as f:
+            f.write(b"not a pickle at all")
+    g, s, stats, _ = _run_once(cache_dir, {"B": 4})
+    assert stats["xla_compiles"] >= 2            # recompiled from scratch
+    assert stats["cache"]["errors"] >= 1
+    np.testing.assert_allclose(s, np.ones((8, 8)))
+    # bad entries were replaced by fresh ones: a third run hits again
+    _, _, stats3, _ = _run_once(cache_dir, {"B": 4})
+    assert stats3["xla_compiles"] == 0
+
+
+def test_cache_key_distinguishes_arg_shapes(tmp_path):
+    cache_dir = str(tmp_path / "variants")
+    rt = IridescentRuntime(async_compile=False, variant_cache=cache_dir)
+    h = rt.register("m", _mm_builder)
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    rt.shutdown()
+    # same handler/config, different shapes -> different entry, no bogus hit
+    rt2 = IridescentRuntime(async_compile=False, variant_cache=cache_dir)
+    h2 = rt2.register("m", _mm_builder)
+    out = h2(jnp.ones((8, 8)), jnp.eye(8))
+    assert out.shape == (8, 8)
+    assert rt2.compile_stats()["cache_hits"] == 0
+    rt2.shutdown()
+
+
+# --- trampoline fast path -------------------------------------------------------
+
+class _CountingLock:
+    """Lock wrapper that counts acquisitions (dispatch must not take any)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.acquisitions = 0
+
+    def acquire(self, *a, **k):
+        self.acquisitions += 1
+        return self._inner.acquire(*a, **k)
+
+    def release(self):
+        return self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+
+def test_dispatch_fast_path_is_lock_free():
+    """Regression: after warmup, a guardless dispatch takes no handler lock,
+    runs no guard checks, and skips arg-spec capture (flag already down)."""
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("m", _mm_builder)
+    x, e = jnp.ones((4, 4)), jnp.eye(4)
+    h(x, e)                                     # warmup: captures arg specs
+    h.specialize({"B": 4}, wait=True)           # guardless specialized variant
+    h(x, e)
+    assert not h._need_arg_specs
+    snap = h._snapshot
+    assert snap.guard_fn is None                # guard check compiled away
+    assert snap.fast is not None                # fast path engaged
+    counting = _CountingLock(h._lock)
+    h._lock = counting
+    before = h.tput.count()
+    for _ in range(100):
+        h(x, e)
+    assert counting.acquisitions == 0           # zero locking per call
+    assert h.tput.count() - before == 100       # lock-free counting still exact
+    rt.shutdown()
+
+
+def test_guarded_variant_takes_slow_path_and_stays_correct():
+    def b(spec):
+        N = spec.generic("N", None, guard=guards.shape_equals(0, 0))
+        return lambda L, R: (L @ R) * 1.0
+
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("m", b)
+    h(jnp.ones((8, 8)), jnp.eye(8))
+    h.specialize({"N": 8}, wait=True)
+    assert h._snapshot.fast is None             # guard forces the slow path
+    out = h(jnp.ones((4, 4)), jnp.eye(4))       # guard miss -> generic
+    np.testing.assert_allclose(out, np.ones((4, 4)))
+    assert h.guard_misses == 1
+    rt.shutdown()
+
+
+def test_guard_miss_counters_are_atomic_under_threads():
+    def b(spec):
+        N = spec.generic("N", None, guard=guards.shape_equals(0, 0))
+        return lambda L, R: (L @ R) * 1.0
+
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("m", b)
+    h(jnp.ones((8, 8)), jnp.eye(8))
+    h.specialize({"N": 8}, wait=True)
+    miss_l, miss_r = jnp.ones((4, 4)), jnp.eye(4)
+    h(miss_l, miss_r)                           # compile the miss shape once
+    base = h.guard_misses
+    n_threads, n_calls = 8, 200
+
+    def hammer():
+        for _ in range(n_calls):
+            h(miss_l, miss_r)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.guard_misses - base == n_threads * n_calls   # no lost updates
+    rt.shutdown()
+
+
+def test_aot_failure_is_transient_not_permanent(caplog):
+    """A transient AOT error falls back to jit for that call, warns once,
+    and does NOT permanently demote the variant."""
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("m", _mm_builder)
+    x, e = jnp.ones((4, 4)), jnp.eye(4)
+    h(x, e)
+    v = h._snapshot.variant
+    assert v.compiled is not None
+    real = v.compiled
+    calls = {"n": 0}
+
+    class Flaky:
+        def __call__(self, *args):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient placement error")
+            return real(*args)
+
+    v.compiled = Flaky()
+    out = h(x, e)                               # transient failure -> jit
+    np.testing.assert_allclose(out, np.ones((4, 4)))
+    assert v.compiled is not None               # NOT demoted
+    out = h(x, e)                               # AOT path recovered
+    assert calls["n"] >= 2
+    assert v._aot_failures == 0                 # success reset the streak
+    rt.shutdown()
+
+
+def test_aot_demotes_after_consecutive_failures():
+    rt = IridescentRuntime(async_compile=False)
+    h = rt.register("m", _mm_builder)
+    x, e = jnp.ones((4, 4)), jnp.eye(4)
+    h(x, e)
+    v = h._snapshot.variant
+
+    class AlwaysBroken:
+        def __call__(self, *args):
+            raise ValueError("layout mismatch")
+
+    v.compiled = AlwaysBroken()
+    for _ in range(5):
+        out = h(x, e)                           # every call stays correct
+        np.testing.assert_allclose(out, np.ones((4, 4)))
+    assert v.compiled is None                   # demoted after the streak
+    rt.shutdown()
