@@ -12,9 +12,11 @@ __all__ = ["time_fn", "Row", "fmt_rows", "measure_dispatch_overhead"]
 def measure_dispatch_overhead(iters: int = 500) -> dict:
     """Trampoline dispatch cost on the cheapest possible handler.
 
-    Times three paths (microseconds/call): the AOT executable called
-    directly (the floor), the handler's lock-free fast path, and the fast
-    path with the per-call throughput bump disabled.  Used by both
+    Times four paths (microseconds/call): the AOT executable called
+    directly (the floor), the handler's lock-free fast path, the fast path
+    with the per-call throughput bump disabled, and the contextual fast
+    path (a ``context_fn`` classifying every call into its workload
+    context before the per-context snapshot dispatch).  Used by both
     fig11_overheads and serve_bench so the two report the same
     methodology.
     """
@@ -33,11 +35,19 @@ def measure_dispatch_overhead(iters: int = 500) -> dict:
         h.count_calls = False
         us_fast_nocount = time_fn(h, x, iters=iters)
         h.count_calls = True
+        # Per-request context routing: a realistic shape-classifying
+        # context_fn, routed through the immutable context map.
+        hc = rt.register("micro_ctx", lambda spec: (lambda x: x * x),
+                         context_fn=lambda a, k: a[0].shape)
+        hc(x)
+        us_ctx = time_fn(hc, x, iters=iters)
         return {
             "direct": round(us_direct, 3),
             "trampoline_fast": round(us_fast, 3),
             "trampoline_fast_nocount": round(us_fast_nocount, 3),
+            "trampoline_contextual": round(us_ctx, 3),
             "overhead": round(us_fast - us_direct, 3),
+            "contextual_overhead": round(us_ctx - us_fast, 3),
         }
     finally:
         rt.shutdown()

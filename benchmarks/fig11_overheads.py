@@ -35,6 +35,9 @@ def run() -> list[Row]:
                     d["trampoline_fast_nocount"],
                     f"+{d['trampoline_fast_nocount'] - d['direct']:.2f}us "
                     f"trampoline (tput bump off)"))
+    rows.append(Row("fig11/dispatch_contextual", d["trampoline_contextual"],
+                    f"+{d['contextual_overhead']:.2f}us per-request context "
+                    f"routing (context_fn + snapshot-map probe)"))
     for rate in (0.0, 0.01, 0.1, 1.0):
         rt = IridescentRuntime(async_compile=False)
         h = rt.register("f", fb)

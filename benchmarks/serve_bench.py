@@ -1,8 +1,8 @@
 """Reduced serve benchmark with machine-readable output (BENCH_serve.json).
 
 Runs the launch/serve decode loop in-process on a reduced model, then
-emits one JSON document with the three numbers this repo's perf
-trajectory is tracked by:
+emits one JSON document with the numbers this repo's perf trajectory is
+tracked by:
 
 * ``tok_per_s``            — end-to-end decode throughput,
 * ``compile``              — CompileService totals (XLA compiles, cache
@@ -11,7 +11,13 @@ trajectory is tracked by:
 * ``dispatch_overhead_us`` — trampoline cost over calling the AOT
                              executable directly (measured on a trivial
                              handler so the number isolates the dispatch
-                             machinery, not the model).
+                             machinery, not the model), including the
+                             per-request context-routing path,
+* ``mixed``                — a mixed-batch-size serve scenario: one
+                             handler, ``context_fn`` = batch size, one
+                             Controller; each batch-shape class settles on
+                             its own specialization (the contexts converge
+                             to *different* configs).
 
 CLI:
     PYTHONPATH=src:. python -m benchmarks.serve_bench \
@@ -32,8 +38,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, measure_dispatch_overhead
 from repro import configs
-from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
-                        IridescentRuntime)
+from repro.core import (ChangeDetector, Controller, EWMA, ExhaustiveSweep,
+                        IridescentRuntime, guards)
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
 from repro.training import make_decode_builder
@@ -42,6 +48,9 @@ from repro.training import make_decode_builder
 def run_serve(steps: int = 120, arch: str = "qwen3-0.6b", batch: int = 4,
               max_len: int = 64, dwell: int = 10, compile_workers: int = 2,
               prefetch: int = 2, cache_dir: str | None = None) -> dict:
+    # Measure dispatch overhead first: after the serve loop the process is
+    # full of jit caches / GC debt and the µs-scale timings drift.
+    dispatch_us = measure_dispatch_overhead()
     cfg = configs.get_reduced(arch).replace(compute_dtype="float32")
     variant_cache = (os.path.join(cache_dir, "variants")
                      if cache_dir else None)
@@ -56,22 +65,23 @@ def run_serve(steps: int = 120, arch: str = "qwen3-0.6b", batch: int = 4,
                              RunOptions(decode_cache_dtype="float32"))
     tokens = jnp.zeros((batch,), jnp.int32)
 
+    space = handler.spec_space()
     labels = ["cache_dtype", "rmsnorm_impl"] + (
         ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
-    explorer = Explorer(
-        handler, ExhaustiveSweep.from_space(handler.spec_space(), labels),
-        dwell=dwell, change_detector=ChangeDetector(0.3),
+    controller = Controller(
+        handler, lambda: ExhaustiveSweep.from_space(space, labels),
+        dwell=dwell, change_detector=lambda: ChangeDetector(0.3),
         wait_compiles=False, prefetch=prefetch)
 
     t0 = time.perf_counter()
     for step in range(steps):
         pos = jnp.int32(step % max_len)
         logits, cache = handler(params, cache, tokens, pos)
-        explorer.step()
+        controller.step()
     jax.block_until_ready(logits)
     wall_s = time.perf_counter() - t0
     rt.compile_service.drain(timeout=120)   # settle in-flight builds
-    best, best_metric = explorer.policy.best()
+    best, best_metric = controller.best()
     compile_stats = rt.compile_stats()
     n_variants = len(handler.variants())
     rt.shutdown()
@@ -89,7 +99,104 @@ def run_serve(steps: int = 120, arch: str = "qwen3-0.6b", batch: int = 4,
         "variants": n_variants,
         "guard_misses": handler.guard_misses,
         "compile": compile_stats,
-        "dispatch_overhead_us": measure_dispatch_overhead(),
+        "dispatch_overhead_us": dispatch_us,
+    }
+
+
+def _mixed_decode_builder(spec):
+    """A decode-like handler whose best specialization depends on the batch
+    size: the generic path must stay batch-agnostic (row-by-row scan, the
+    safe fallback any batch can take), while a variant specialized to an
+    assumed batch size may use the vectorized fused matmul.  A variant
+    whose assumption does not match the incoming batch guard-misses to the
+    generic path — so each batch-shape context converges to *its own*
+    assumption, never a rival context's."""
+    n = spec.generic("batch", None, guard=guards.shape_equals(0, 0))
+
+    def f(x, w):
+        if n is None:
+            # generic: handles any batch, one row at a time
+            return jax.lax.map(lambda r: r @ w, x)
+        # specialized: the batch==n assumption licenses one fused matmul
+        return x @ w
+
+    return f
+
+
+def run_mixed(steps: int = 360, batches=(1, 64), d: int = 128,
+              dwell: int = 20) -> dict:
+    """Mixed-batch-size serve: per-request context routing + one Controller
+    searching each batch-shape class independently.
+
+    The policy metric is each class's *specialized-service* rate: guard-hit
+    fraction over the dwell window divided by the class's per-call latency
+    (EWMA).  Guard-missed calls were served by the generic fallback — a
+    specialization whose assumption never matches its class delivers zero
+    specialized service, however fast the fallback is.  Per-class numbers
+    (not wall-clock rate) keep the measurement unconfounded by whatever the
+    *other* context is dwelling on in the interleaved loop.
+    """
+    import numpy as np
+
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("mixed_decode", _mixed_decode_builder,
+                          context_fn=lambda a, k: int(a[0].shape[0]))
+    w = jnp.asarray(np.random.RandomState(0).randn(d, d).astype(np.float32))
+    xs = {b: jnp.ones((b, d), jnp.float32) for b in batches}
+    candidates = [{"batch": b} for b in batches]
+    latency = {b: EWMA(0.3) for b in batches}   # per-class seconds/call
+    marks = {b: (0, 0) for b in batches}    # (guard_misses, calls) at last read
+
+    def specialized_rate(view):
+        gm, calls = view.guard_misses, view.calls()
+        prev_gm, prev_calls = marks[view.key]
+        marks[view.key] = (gm, calls)
+        dcalls = max(1, calls - prev_calls)
+        hit = 1.0 - (gm - prev_gm) / dcalls
+        return hit / max(latency[view.key].value or 1e-9, 1e-9)
+
+    controller = Controller(
+        handler, lambda: ExhaustiveSweep(candidates),
+        metric=specialized_rate,
+        # The scenario under test is per-context *settling*; µs-scale
+        # latencies on a shared 2-core CI host jitter far past any sane
+        # change threshold, so re-exploration is disabled here (change
+        # adaptation has its own benchmarks: fig7/fig8).
+        change_detector=lambda: ChangeDetector(float("inf")),
+        dwell=dwell, wait_compiles=True, prefetch=0)
+
+    t0 = time.perf_counter()
+    for step in range(steps):
+        for b in batches:                   # interleave workload classes
+            t1 = time.perf_counter()
+            out = handler(xs[b], w)
+            jax.block_until_ready(out)
+            latency[b].update(time.perf_counter() - t1)
+        controller.step()
+    wall_s = time.perf_counter() - t0
+
+    status = controller.status()
+    contexts = {}
+    for b in batches:
+        st = status.get(b, {})
+        contexts[str(b)] = {
+            "config": {k: repr(v) for k, v in (st.get("active") or {}).items()},
+            "phase": st.get("phase"),
+            "calls": st.get("calls"),
+            "guard_misses": handler.context(b).guard_misses,
+            "tok_per_s": round(st.get("calls", 0) * b / wall_s, 2),
+        }
+    settled = controller.settled()
+    distinct = len({json.dumps(c["config"], sort_keys=True)
+                    for c in contexts.values()}) == len(contexts)
+    rt.shutdown()
+    return {
+        "steps": steps,
+        "batches": list(batches),
+        "wall_s": round(wall_s, 3),
+        "contexts": contexts,
+        "settled": settled,
+        "distinct_configs": distinct,
     }
 
 
@@ -102,8 +209,10 @@ def write_json(path: str, result: dict) -> None:
 def run() -> list[Row]:
     """benchmarks/run.py entry: CSV rows + BENCH_serve.json side artifact."""
     result = run_serve()
+    result["mixed"] = run_mixed()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
+    mixed = result["mixed"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
             f"wall={result['wall_s']}s"),
@@ -114,6 +223,11 @@ def run() -> list[Row]:
             f"cancelled={result['compile']['cancelled']}"),
         Row("serve/dispatch_fast", d["trampoline_fast"],
             f"+{d['overhead']}us vs direct"),
+        Row("serve/dispatch_contextual", d["trampoline_contextual"],
+            f"+{d['contextual_overhead']}us vs fast path"),
+        Row("serve/mixed_distinct_configs",
+            float(mixed["distinct_configs"]),
+            f"contexts={list(mixed['contexts'])}"),
     ]
 
 
@@ -133,6 +247,7 @@ def main() -> None:
                        max_len=args.max_len, dwell=args.dwell,
                        compile_workers=args.compile_workers,
                        prefetch=args.prefetch, cache_dir=args.cache_dir)
+    result["mixed"] = run_mixed()
     write_json(args.out, result)
     print(json.dumps(result, indent=1, sort_keys=True))
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import ExhaustiveSweep, Explorer, IridescentRuntime, cartesian
+from repro.core import Controller, ExhaustiveSweep, IridescentRuntime, cartesian
 from repro.models import transformer as model
 from repro.optim import OptConfig, init_opt_state
 from repro.training import make_train_builder
@@ -35,12 +35,12 @@ def main():
         [{"moe_impl": i} for i in ("einsum", "gather")],
         [{"moe_ranking": r} for r in ("cumsum", "sort")],
     )
-    explorer = Explorer(handler, ExhaustiveSweep(candidates), dwell=15)
+    controller = Controller(handler, ExhaustiveSweep(candidates), dwell=15)
     print("exploring MoE dispatch implementations...")
     for i in range(110):
         state, _ = handler(state, batch)
-        explorer.step()
-    for phase, cfg_, metric in explorer.history:
+        controller.step()
+    for phase, cfg_, metric in controller.history:
         sel = {k: v for k, v in (cfg_ or {}).items()
                if k in ("moe_impl", "moe_ranking")}
         print(f"  {phase.value:8s} {sel}  tput={metric:8.1f} steps/s")

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExhaustiveSweep, Explorer, IridescentRuntime, guards
+from repro.core import Controller, ExhaustiveSweep, IridescentRuntime, guards
 
 
 # ---- handler code (paper Fig 2a) ---------------------------------------------
@@ -43,7 +43,7 @@ def main():
     y = jnp.asarray(rs.randn(n, n).astype(np.float32))
     matmul(x, y)   # generic version serves immediately
 
-    explorer = Explorer(
+    controller = Controller(
         matmul,
         ExhaustiveSweep.from_space(matmul.spec_space(), labels=["B"]),
         dwell=30)
@@ -51,8 +51,8 @@ def main():
     print("exploring block sizes online...")
     for i in range(200):
         matmul(x, y)          # the server keeps serving during exploration
-        explorer.step()
-    for phase, cfg, metric in explorer.history:
+        controller.step()
+    for phase, cfg, metric in controller.history:
         print(f"  {phase.value:8s} config={cfg}  tput={metric:9.1f}/s")
     print(f"selected: {matmul.active_config()}")
 

@@ -34,7 +34,8 @@ from repro.distributed.sharding import spec_for_axes
 
 logger = logging.getLogger("repro.checkpoint.store")
 
-__all__ = ["CheckpointManager", "save_spec_state", "restore_spec_state"]
+__all__ = ["CheckpointManager", "save_spec_state", "restore_spec_state",
+           "SPEC_STATE_VERSION"]
 
 
 # -- specialization-state persistence ------------------------------------------
@@ -66,10 +67,21 @@ def _decode_config(cfg: dict) -> dict:
     return out
 
 
+#: spec_state.json format version.  v2 is per-context:
+#: ``{"version": 2, "handlers": {name: {"contexts": {encoded_key: cfg}}}}``.
+#: The v1 flat format ``{name: cfg}`` (one global config per handler) is
+#: still read and mapped onto each handler's default context.
+SPEC_STATE_VERSION = 2
+
+
 def save_spec_state(path: str, runtime: Any) -> None:
-    """Persist each handler's active configuration (atomic write)."""
-    state = {name: _encode_config(cfg)
-             for name, cfg in runtime.spec_state().items()}
+    """Persist each handler's active configuration per context
+    (atomic write, versioned format)."""
+    handlers = {}
+    for name, ctx_cfgs in runtime.spec_state().items():
+        handlers[name] = {"contexts": {enc: _encode_config(cfg)
+                                       for enc, cfg in ctx_cfgs.items()}}
+    state = {"version": SPEC_STATE_VERSION, "handlers": handlers}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                prefix=".tmp_spec_")
@@ -79,12 +91,20 @@ def save_spec_state(path: str, runtime: Any) -> None:
 
 
 def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
-    """Re-apply persisted per-handler configurations; best-effort.
+    """Re-apply persisted per-handler, per-context configurations;
+    best-effort.
 
-    Combined with a warm variant cache this brings every handler back to
-    its tuned config with zero recompiles.  Returns True if state was
-    applied.
+    The default context's config is applied immediately; configs for other
+    workload contexts are *seeded* onto the handler and applied the moment
+    traffic first materializes each context (contexts are created by
+    dispatch, so they do not exist yet at restore time).  The legacy flat
+    format (one config per handler, no version field) still loads — it
+    targets the default context.  Combined with a warm variant cache this
+    brings every handler back to its tuned configs with zero recompiles.
+    Returns True if any state was applied or seeded.
     """
+    from repro.core.runtime import DEFAULT_CONTEXT, encode_context_key
+
     if not os.path.exists(path):
         return False
     try:
@@ -94,22 +114,55 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
         logger.warning("spec state %s unreadable (%s); starting generic",
                        path, e)
         return False
+    version = state.get("version") if isinstance(state, dict) else None
+    if version == 2:
+        handlers = state.get("handlers")
+        handlers = handlers if isinstance(handlers, dict) else {}
+        per_handler = {}
+        for name, entry in handlers.items():
+            ctxs = entry.get("contexts") if isinstance(entry, dict) else None
+            per_handler[name] = ctxs if isinstance(ctxs, dict) else {}
+    elif version is None and isinstance(state, dict):
+        # v1 flat format (no version field): {handler: config} -> the
+        # default context.
+        per_handler = {
+            name: {encode_context_key(DEFAULT_CONTEXT): cfg}
+            for name, cfg in state.items() if isinstance(cfg, dict)}
+    else:
+        # A version we don't know (newer writer, or a corrupted field):
+        # misparsing it as v1 would silently drop every tuned config.
+        logger.warning("spec state %s has unsupported version %r; "
+                       "starting generic", path, version)
+        return False
+    default_enc = encode_context_key(DEFAULT_CONTEXT)
     applied = False
-    for name, cfg in state.items():
+    for name, ctx_cfgs in per_handler.items():
         handler = runtime.handlers.get(name)
         if handler is None:
             continue
-        decoded = _decode_config(cfg)
-        try:
-            handler.specialize(decoded, wait=wait)
-            applied = True
-        except Exception as e:
-            # Best-effort by contract: a stale config (points renamed,
-            # builder changed, cross-host payloads) must degrade to the
-            # generic variant, never crash startup.
-            logger.warning("spec state for handler %r no longer valid "
-                           "(%s: %s); keeping generic", name,
-                           type(e).__name__, e)
+        if not isinstance(ctx_cfgs, dict):
+            logger.warning("spec state for handler %r malformed; "
+                           "keeping generic", name)
+            continue
+        for enc_key, cfg in ctx_cfgs.items():
+            # Best-effort by contract: a stale or malformed config (points
+            # renamed, builder changed, cross-host payloads, truncated
+            # file) must degrade to the generic variant, never crash
+            # startup.
+            try:
+                if not isinstance(cfg, dict):
+                    raise TypeError(f"config is {type(cfg).__name__}, "
+                                    f"not a dict")
+                decoded = _decode_config(cfg)
+                if enc_key == default_enc:
+                    handler.specialize(decoded, wait=wait)
+                else:
+                    handler.seed_spec_state(enc_key, decoded)
+                applied = True
+            except Exception as e:
+                logger.warning("spec state for handler %r context %s no "
+                               "longer valid (%s: %s); keeping generic",
+                               name, enc_key, type(e).__name__, e)
     return applied
 
 

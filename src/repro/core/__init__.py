@@ -28,12 +28,16 @@ from repro.core.specializer import (SpecCtx, Specialized, discover_space,
 from repro.core.compile_service import (CompileService, PRIORITY_ACTIVATE,
                                         PRIORITY_SPECULATIVE)
 from repro.core.variant_cache import VariantCache
-from repro.core.runtime import Handler, IridescentRuntime, Variant
-from repro.core.policy import (CoordinateDescent, EpsilonGreedy,
-                               ExhaustiveSweep, Explorer, Phase, Policy,
-                               SuccessiveHalving)
+from repro.core.runtime import (ContextView, DEFAULT_CONTEXT, Handler,
+                                IridescentRuntime, Variant,
+                                encode_context_key)
+from repro.core.policy import (ContextualBandit, CoordinateDescent,
+                               EpsilonGreedy, ExhaustiveSweep, Explorer,
+                               Phase, Policy, ScoreBoard, SuccessiveHalving)
+from repro.core.controller import Controller
 from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
-                                StepTimer, ThroughputCounter)
+                                StepTimer, ThroughputCounter,
+                                ThroughputWindow)
 from repro.core import fastpath, guards, instrumentation
 
 __all__ = [
@@ -41,9 +45,11 @@ __all__ = [
     "GenericPoint", "RangePoint", "SpecPoint", "SpecSpace", "cartesian",
     "config_key", "SpecCtx", "Specialized", "discover_space",
     "specialize_builder", "CompileService", "PRIORITY_ACTIVATE",
-    "PRIORITY_SPECULATIVE", "VariantCache", "Handler", "IridescentRuntime",
-    "Variant", "CoordinateDescent", "EpsilonGreedy", "ExhaustiveSweep",
-    "Explorer", "Phase", "Policy", "SuccessiveHalving", "AtomicCounter",
-    "ChangeDetector", "EWMA", "StepTimer", "ThroughputCounter", "fastpath",
+    "PRIORITY_SPECULATIVE", "VariantCache", "ContextView", "DEFAULT_CONTEXT",
+    "Handler", "IridescentRuntime", "Variant", "encode_context_key",
+    "ContextualBandit", "Controller", "CoordinateDescent", "EpsilonGreedy",
+    "ExhaustiveSweep", "Explorer", "Phase", "Policy", "ScoreBoard",
+    "SuccessiveHalving", "AtomicCounter", "ChangeDetector", "EWMA",
+    "StepTimer", "ThroughputCounter", "ThroughputWindow", "fastpath",
     "guards", "instrumentation",
 ]

@@ -48,6 +48,17 @@ PRIORITY_ACTIVATE = 0
 PRIORITY_SPECULATIVE = 10
 
 
+def _mean_compile_s(records: list[dict]) -> float | None:
+    """THE rule for what counts as an observed compile cost: records with a
+    measured ``compile_s`` that were not cache hits.  Both the per-config
+    telemetry (:meth:`CompileService.cost_estimates`) and the Controller's
+    budget gate (:meth:`CompileService.estimate_compile_s`) go through
+    here, so they can never diverge."""
+    xs = [r["compile_s"] for r in records
+          if r.get("compile_s") is not None and not r.get("cache_hit")]
+    return sum(xs) / len(xs) if xs else None
+
+
 class CompileRequest:
     """One unit of build work; shared by every submitter that deduped onto it."""
 
@@ -160,15 +171,19 @@ class CompileService:
     def cancel_pending(self, handler: str | None = None,
                        keep_keys: set | None = None,
                        speculative_only: bool = False,
-                       max_priority: int | None = None) -> int:
+                       max_priority: int | None = None,
+                       key_filter: Callable[[Any], bool] | None = None) -> int:
         """Cancel still-queued requests the policy has moved past.
 
         ``speculative_only`` restricts to speculative prefetches;
         ``max_priority`` restricts to requests at that priority or more
         urgent (e.g. ``PRIORITY_ACTIVATE`` to cancel stale activations
-        while leaving speculative prefetches queued).  Running builds are
-        never interrupted (XLA compiles are not abortable); they simply
-        complete into the variant cache.  Returns the number cancelled.
+        while leaving speculative prefetches queued); ``key_filter``
+        restricts to requests whose key matches the predicate (handlers use
+        it to scope cancellation to one specialization context).  Running
+        builds are never interrupted (XLA compiles are not abortable); they
+        simply complete into the variant cache.  Returns the number
+        cancelled.
         """
         cancelled = []
         with self._cv:
@@ -182,6 +197,8 @@ class CompileService:
                 if speculative_only and not req.speculative:
                     continue
                 if max_priority is not None and req.priority > max_priority:
+                    continue
+                if key_filter is not None and not key_filter(key):
                     continue
                 req.status = "cancelled"
                 req.future.cancel()
@@ -231,6 +248,67 @@ class CompileService:
         """Per-request records (completed requests), oldest first."""
         with self._lock:
             return [dict(r) for r in self._history]
+
+    # -- cost estimation (Table 4 telemetry, surfaced per config) ----------------
+    def _scoped_records(self, handler: str | None) -> list[dict]:
+        """History records for ``handler`` (all of them; see
+        :func:`_mean_compile_s` for the single place that decides which of
+        these count as a real compile)."""
+        with self._lock:
+            records = [dict(r) for r in self._history]
+        return [r for r in records
+                if handler is None or r.get("handler") == handler]
+
+    def cost_estimates(self, handler: str | None = None) -> dict:
+        """Per-config compile-cost summaries from the request history —
+        the Table-4 telemetry surfaced per configuration, for dashboards
+        and benchmark reports.  The Controller's budget gate consumes the
+        same history (and the same ``_mean_compile_s`` rule) through the
+        scalar :meth:`estimate_compile_s`.
+
+        Returns ``{config repr: {"n", "mean_compile_s", "cache_hits"}}``.
+        """
+        from repro.core.points import config_key
+        by_cfg: dict[tuple, list[dict]] = {}
+        cfg_of: dict[tuple, dict] = {}
+        for r in self._scoped_records(handler):
+            key = config_key(r.get("config") or {})
+            by_cfg.setdefault(key, []).append(r)
+            cfg_of.setdefault(key, dict(r.get("config") or {}))
+        return {
+            repr(cfg_of[key]): {
+                "n": len(recs),
+                "cache_hits": sum(1 for r in recs if r.get("cache_hit")),
+                "mean_compile_s": _mean_compile_s(recs),
+            }
+            for key, recs in by_cfg.items()
+        }
+
+    def estimate_compile_s(self, handler: str | None = None,
+                           config: dict | None = None) -> float | None:
+        """Expected XLA compile seconds for a candidate.
+
+        Preference order: the mean of past compiles of this exact config,
+        then the handler's mean, then the global mean; ``None`` when no
+        compile has ever been observed (the caller should not gate on a
+        guess it does not have).
+        """
+        from repro.core.points import config_key
+        scoped = self._scoped_records(handler)
+        if config is not None:
+            ckey = config_key(config)
+            exact = _mean_compile_s(
+                [r for r in scoped
+                 if config_key(r.get("config") or {}) == ckey])
+            if exact is not None:
+                return exact
+        mean = _mean_compile_s(scoped)
+        if mean is not None:
+            return mean
+        with self._lock:
+            agg_n = self._agg["xla_compiles"]
+            agg_total = self._agg["total_compile_s"]
+        return agg_total / agg_n if agg_n else None
 
     def stats(self) -> dict:
         with self._lock:

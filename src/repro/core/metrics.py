@@ -14,8 +14,8 @@ import threading
 import time
 from typing import Deque
 
-__all__ = ["AtomicCounter", "ThroughputCounter", "EWMA", "ChangeDetector",
-           "StepTimer"]
+__all__ = ["AtomicCounter", "ThroughputCounter", "ThroughputWindow", "EWMA",
+           "ChangeDetector", "StepTimer"]
 
 
 class AtomicCounter:
@@ -85,6 +85,48 @@ class ThroughputCounter:
     def count(self) -> int:
         with self._lock:
             return self._counter.value() - self._base
+
+    def total(self) -> int:
+        """Lifetime event count (unaffected by resets)."""
+        return self._counter.value()
+
+
+class ThroughputWindow:
+    """Bounded window of per-dwell throughput observations for one
+    specialization context.
+
+    The Controller records one observation per dwell window per context
+    (``observe(rate)``); readers get the recent-history view (``last()``,
+    ``summary()``) that per-context status reporting and stats calls
+    consume.  Thread-safe: observations come from the controller thread
+    while ``summary()`` may be read by stats calls.
+    """
+
+    def __init__(self, maxlen: int = 64, clock=time.perf_counter):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._samples: Deque[tuple[float, float]] = collections.deque(
+            maxlen=maxlen)
+
+    def observe(self, rate: float) -> None:
+        with self._lock:
+            self._samples.append((self._clock(), float(rate)))
+
+    def last(self) -> float | None:
+        with self._lock:
+            return self._samples[-1][1] if self._samples else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    def summary(self) -> dict:
+        with self._lock:
+            samples = [r for _, r in self._samples]
+        if not samples:
+            return {"n": 0, "mean": None, "last": None}
+        return {"n": len(samples), "mean": sum(samples) / len(samples),
+                "last": samples[-1]}
 
 
 class EWMA:

@@ -134,6 +134,18 @@ class RangePoint(SpecPoint):
     hi: Any = 0
     step: Any = 1
 
+    def __post_init__(self):
+        # A non-positive step would make candidates() loop forever.
+        try:
+            ok = self.step > 0
+        except TypeError:
+            ok = False
+        if not ok:
+            raise ValueError(
+                f"RangePoint {self.label!r} requires step > 0 "
+                f"(got step={self.step!r}); a non-positive step would never "
+                f"advance past hi={self.hi!r}")
+
     def candidates(self) -> Sequence[Any]:
         out, v = [], self.lo
         while v <= self.hi:

@@ -10,9 +10,14 @@ building blocks.  These are the building blocks:
   spaces where exhaustive search is too slow (our hillclimbing driver).
 * :class:`EpsilonGreedy` — keep exploiting the best, occasionally re-test.
 * :class:`SuccessiveHalving` — racing: drop the losing half each rung.
-* :class:`Explorer` — the driver the fixed code embeds in its loop; handles
-  the instrument → explore → exploit lifecycle and workload-change
-  re-exploration (paper Fig 7/9).
+* :class:`ContextualBandit` — UCB1 over a fixed candidate set (joint
+  impl+tile configs); the Controller instantiates one per specialization
+  context, so each workload class keeps its own arm statistics.
+* :class:`Explorer` — the legacy single-context lifecycle driver (handles
+  instrument → explore → exploit and workload-change re-exploration, paper
+  Fig 7/9).  New code should drive
+  :class:`~repro.core.controller.Controller`, which runs this lifecycle per
+  workload context and adds compile-cost budgeting.
 """
 from __future__ import annotations
 
@@ -28,8 +33,9 @@ from repro.core.points import Config, SpecSpace, config_key
 
 logger = logging.getLogger("repro.core.policy")
 
-__all__ = ["Policy", "ExhaustiveSweep", "CoordinateDescent", "EpsilonGreedy",
-           "SuccessiveHalving", "Explorer", "Phase"]
+__all__ = ["Policy", "ScoreBoard", "ExhaustiveSweep", "CoordinateDescent",
+           "EpsilonGreedy", "SuccessiveHalving", "ContextualBandit",
+           "Explorer", "Phase"]
 
 
 class Policy:
@@ -65,22 +71,33 @@ class Policy:
         raise NotImplementedError
 
 
-class _ScoreBoard:
+class ScoreBoard:
+    """Freshest observation per config; ``best()`` breaks metric ties by
+    first-observation order (the earliest config observed at the top metric
+    wins — deterministic, and stable when re-observations refresh a score
+    without changing it)."""
+
     def __init__(self):
         self.scores: dict[tuple, tuple[dict, float]] = {}
 
     def observe(self, config: Config, metric: float) -> None:
         key = config_key(config)
         prev = self.scores.get(key)
-        # Keep the freshest observation (conditions drift over time).
+        # Keep the freshest observation (conditions drift over time) without
+        # disturbing the insertion order that tie-breaking relies on.
         self.scores[key] = (dict(config), metric)
         del prev
 
     def best(self) -> tuple[dict | None, float]:
         if not self.scores:
             return None, -math.inf
+        # max() keeps the first of equal-metric entries in insertion order.
         cfg, metric = max(self.scores.values(), key=lambda cm: cm[1])
         return dict(cfg), metric
+
+
+#: Backwards-compatible private alias.
+_ScoreBoard = ScoreBoard
 
 
 class ExhaustiveSweep(Policy):
@@ -275,6 +292,101 @@ class SuccessiveHalving(Policy):
 
     def best(self) -> tuple[dict | None, float]:
         return self._board.best()
+
+
+class ContextualBandit(Policy):
+    """UCB1 bandit over a fixed candidate set (e.g. the joint impl+tile
+    configuration space).
+
+    The :class:`~repro.core.controller.Controller` instantiates **one bandit
+    per specialization context** (its policy-factory protocol), so every
+    workload class keeps its own arm statistics — the "contextual" part is
+    the per-context arm-set, not side information inside one instance.
+
+    ``propose()`` first pulls every arm once (in candidate order), then
+    maximizes ``mean + c * sqrt(2 ln N / n)``.  After ``rounds`` total
+    proposals it returns ``None`` so the driver settles into EXPLOIT on
+    ``best()`` (the arm with the highest running mean; ties break to the
+    earliest candidate).  ``rounds=None`` keeps exploring forever.
+    """
+
+    def __init__(self, candidates: Sequence[Config], c: float = 1.0,
+                 rounds: int | None = 0):
+        self.candidates = [dict(cfg) for cfg in candidates]
+        if not self.candidates:
+            raise ValueError("ContextualBandit needs at least one candidate")
+        self.c = float(c)
+        #: rounds=0 (the default) means "auto": 4 pulls per arm.
+        self.rounds = (4 * len(self.candidates) if rounds == 0 else rounds)
+        self.reset()
+
+    def reset(self) -> None:
+        self._keys = [config_key(cfg) for cfg in self.candidates]
+        self._pulls: dict[tuple, int] = {k: 0 for k in self._keys}
+        self._means: dict[tuple, float] = {k: 0.0 for k in self._keys}
+        self._observations = 0
+        self._proposed = 0
+        self._board = ScoreBoard()
+
+    def _unseen(self) -> list[dict]:
+        return [cfg for cfg, k in zip(self.candidates, self._keys)
+                if self._pulls[k] == 0]
+
+    def _ucb(self, key: tuple) -> float:
+        n = self._pulls[key]
+        if n == 0:
+            return math.inf
+        total = max(1, self._observations)
+        return self._means[key] + self.c * math.sqrt(2 * math.log(total) / n)
+
+    def propose(self) -> dict | None:
+        if self.rounds is not None and self._proposed >= self.rounds:
+            return None
+        self._proposed += 1
+        unseen = self._unseen()
+        if unseen:
+            return dict(unseen[0])
+        # max() keeps the earliest candidate among UCB ties.
+        best_key = max(self._keys, key=self._ucb)
+        idx = self._keys.index(best_key)
+        return dict(self.candidates[idx])
+
+    def peek(self, n: int = 1) -> list[dict]:
+        # Only the initial pull-each-arm-once phase is metric-independent.
+        remaining = (None if self.rounds is None
+                     else max(0, self.rounds - self._proposed))
+        upcoming = self._unseen()
+        if remaining is not None:
+            upcoming = upcoming[:remaining]
+        return [dict(cfg) for cfg in upcoming[:n]]
+
+    def observe(self, config: Config, metric: float) -> None:
+        key = config_key(config)
+        if key not in self._pulls:        # tolerate out-of-set observations
+            self._keys.append(key)
+            self.candidates.append(dict(config))
+            self._pulls[key] = 0
+            self._means[key] = 0.0
+        self._pulls[key] += 1
+        self._observations += 1
+        n = self._pulls[key]
+        self._means[key] += (metric - self._means[key]) / n
+        self._board.observe(config, metric)
+
+    def arm_stats(self) -> list[dict]:
+        """Per-arm pulls / running means (telemetry)."""
+        return [{"config": dict(cfg), "pulls": self._pulls[k],
+                 "mean": self._means[k]}
+                for cfg, k in zip(self.candidates, self._keys)]
+
+    def best(self) -> tuple[dict | None, float]:
+        pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
+                  if self._pulls[k] > 0]
+        if not pulled:
+            return None, -math.inf
+        # max() keeps the earliest candidate among equal means.
+        cfg, key = max(pulled, key=lambda ck: self._means[ck[1]])
+        return dict(cfg), self._means[key]
 
 
 class Phase(enum.Enum):

@@ -15,6 +15,16 @@ Components, mapped from the paper:
   per-call fast path takes **no locks**: one attribute read, one optional
   lock-free counter bump, then the compiled executable.  Guard checks are
   skipped entirely for guardless variants.
+* **Specialization contexts** — the paper specializes to "the hardware and
+  workload conditions at a given time"; a serve loop that mixes workload
+  classes (decode batch 1 vs 64) must not thrash one global specialization
+  between them.  ``register(name, builder, context_fn=...)`` takes a
+  workload classifier ``context_fn(args, kwargs) -> hashable``; the handler
+  keeps an immutable map ``context_key -> _Snapshot`` (swapped atomically by
+  reference, like the snapshot itself), so each workload class dispatches to
+  *its own* active variant with its own stats, guard-miss counters, and
+  argument specs.  Without ``context_fn`` everything targets the single
+  default context and dispatch is exactly the PR 2 lock-free fast path.
 * **Guards** — before dispatching to a specialized variant the trampoline
   evaluates the variant's pre-bound guard closure against the actual
   arguments; on failure it transparently re-routes to the generic variant
@@ -39,14 +49,26 @@ import jax
 from repro.core import instrumentation as instr_mod
 from repro.core.compile_service import (CompileService, PRIORITY_ACTIVATE,
                                         PRIORITY_SPECULATIVE)
-from repro.core.metrics import AtomicCounter, ThroughputCounter
+from repro.core.metrics import AtomicCounter, ThroughputCounter, ThroughputWindow
 from repro.core.points import Config, SpecSpace, config_key
 from repro.core.specializer import Specialized, specialize_builder
 from repro.core.variant_cache import VariantCache, spec_fingerprint
 
 logger = logging.getLogger("repro.core.runtime")
 
-__all__ = ["IridescentRuntime", "Handler", "Variant"]
+__all__ = ["IridescentRuntime", "Handler", "Variant", "ContextView",
+           "DEFAULT_CONTEXT", "encode_context_key"]
+
+#: Context key used when no ``context_fn`` is given (and the target of the
+#: legacy, context-less policy API: ``rt.specialize(cfg)`` etc.).
+DEFAULT_CONTEXT = "default"
+
+
+def encode_context_key(key: Any) -> str:
+    """Stable string encoding of a context key for persistence
+    (``spec_state.json``).  Matching is done on encoded strings, so the
+    encoding only needs to be deterministic, not invertible."""
+    return repr(key)
 
 
 def _abstractify(x: Any) -> Any:
@@ -136,21 +158,106 @@ class _Snapshot:
     time: the active variant, the generic fallback, the pre-bound composite
     guard (``None`` for guardless variants), whether host-side sampling is
     on, and — when none of the slow-path features apply — the bound
-    ``variant.call`` to jump straight to.
+    ``variant.call`` to jump straight to.  ``ready=False`` (argument specs
+    not captured yet) forces the slow path by leaving ``fast`` unset.
     """
 
     __slots__ = ("variant", "generic", "guard_fn", "sample", "fast")
 
     def __init__(self, variant: Variant, generic: Variant,
-                 instr_rate: float):
+                 instr_rate: float, ready: bool = True):
         self.variant = variant
         self.generic = generic
         self.guard_fn = (variant.specialized.guard_fn
                          if variant is not generic else None)
         self.sample = instr_rate > 0.0
         self.fast = (variant.call
-                     if self.guard_fn is None and not self.sample
+                     if ready and self.guard_fn is None and not self.sample
                      and not variant.specialized.instrumented else None)
+
+
+class _Context:
+    """Per-context dispatch state: one workload class's variants, active
+    selection, argument specs, and stats.  Mutated only under the handler
+    lock; the published ``snapshot`` is immutable and swapped by reference
+    so dispatch stays lock-free."""
+
+    __slots__ = ("key", "variants", "active_key", "generic_key", "arg_specs",
+                 "need_arg_specs", "epoch", "snapshot", "tput",
+                 "guard_misses", "window")
+
+    def __init__(self, key: Any, tput: ThroughputCounter):
+        self.key = key
+        self.variants: dict[tuple, Variant] = {}
+        self.active_key: tuple | None = None
+        self.generic_key: tuple = (key, config_key({}), False)
+        self.arg_specs: tuple | None = None    # (abstract args, kwargs)
+        self.need_arg_specs = True
+        self.epoch = 0                         # supersedes stale activations
+        self.snapshot: _Snapshot | None = None
+        self.tput = tput
+        self.guard_misses = AtomicCounter()
+        #: per-context throughput observations (filled by the Controller)
+        self.window = ThroughputWindow()
+
+
+class ContextView:
+    """Handler-like facade bound to one specialization context.
+
+    The :class:`~repro.core.controller.Controller` drives one explore loop
+    per context through this surface; it mirrors the subset of the
+    :class:`Handler` API that is context-scoped.
+    """
+
+    __slots__ = ("handler", "key", "_ctx")
+
+    def __init__(self, handler: "Handler", key: Any, ctx: _Context):
+        self.handler = handler
+        self.key = key
+        self._ctx = ctx
+
+    @property
+    def tput(self) -> ThroughputCounter:
+        return self._ctx.tput
+
+    @property
+    def window(self) -> ThroughputWindow:
+        return self._ctx.window
+
+    @property
+    def guard_misses(self) -> int:
+        return self._ctx.guard_misses.value()
+
+    def specialize(self, config: Config, wait: bool = False,
+                   instrument: bool = False) -> None:
+        self.handler.specialize(config, wait=wait, instrument=instrument,
+                                context=self.key)
+
+    def prefetch(self, configs: Iterable[Config]) -> int:
+        return self.handler.prefetch(configs, context=self.key)
+
+    def despecialize(self, wait: bool = True) -> None:
+        self.handler.despecialize(wait=wait, context=self.key)
+
+    def active_config(self) -> dict:
+        return self.handler.active_config(context=self.key)
+
+    def has_variant(self, config: Config) -> bool:
+        """Whether a variant for ``config`` is already built in this
+        context (specializing to it costs no fresh compile)."""
+        key = (self._ctx.key, config_key(config), False)
+        with self.handler._lock:
+            return key in self._ctx.variants
+
+    def spec_space(self) -> SpecSpace:
+        return self.handler.spec_space()
+
+    def calls(self) -> int:
+        """Lifetime dispatch count for this context."""
+        return self._ctx.tput.total()
+
+    def __repr__(self) -> str:
+        return f"ContextView({self.handler.name!r}, {self.key!r})"
 
 
 def _done_future(value: Any) -> concurrent.futures.Future:
@@ -165,6 +272,12 @@ class Handler:
     "The JIT creates a trampoline function which calls the most recent
     specialized version of the function. The trampoline function is stored at
     a fixed address and does not change across runtime updates."
+
+    With a ``context_fn`` the trampoline routes each call to the snapshot of
+    its workload class (``context_fn(args, kwargs) -> hashable``); each
+    context holds its own variants, active config, argument specs, and
+    stats.  Without one, all calls hit the single default context and the
+    dispatch fast path is unchanged from the context-less design.
     """
 
     def __init__(
@@ -173,32 +286,113 @@ class Handler:
         builder: Callable,
         runtime: "IridescentRuntime",
         jit_kwargs: Mapping[str, Any] | None = None,
+        context_fn: Callable[[tuple, dict], Any] | None = None,
     ):
         self.name = name
         self.builder = builder
         self.runtime = runtime
         self.jit_kwargs = dict(jit_kwargs or {})
+        self._context_fn = context_fn
         self._lock = threading.Lock()
-        self._variants: dict[tuple, Variant] = {}
-        self._active_key: tuple | None = None
-        self._generic_key: tuple = (config_key({}), False)
-        self._arg_specs: tuple | None = None   # (abstract args, kwargs)
-        self._need_arg_specs = True
-        self._activate_epoch = 0               # supersedes stale activations
-        self._snapshot: _Snapshot | None = None
+        self._create_lock = threading.Lock()   # context materialization only
+        self._contexts: dict[Any, _Context] = {}
+        self._ctx_map: dict[Any, _Context] = {}  # immutable copy, swapped
+        self._seeded: dict[str, dict] = {}       # encoded key -> config
         self.space: SpecSpace = SpecSpace()
         self.tput = ThroughputCounter()
         self.count_calls = True                # bump tput on every dispatch
         self.recorders = instr_mod.RecorderSet()
         self._instr_rate = 0.0
         self._guard_miss_counter = AtomicCounter()
-        # Build the generic variant eagerly so dispatch always has a fallback.
-        self._install({}, wait=True, activate=True)
+        # Mirrors of the default context's dispatch state (the contextless
+        # fast path reads these; tests assert on them).
+        self._snapshot: _Snapshot | None = None
+        self._need_arg_specs = True
+        # Build the default context (and its generic variant) eagerly so
+        # dispatch always has a fallback.
+        self._default = self._materialize_context(DEFAULT_CONTEXT)
 
     @property
     def guard_misses(self) -> int:
-        """Host-side guard misses across all variants (lock-free counter)."""
+        """Host-side guard misses across all contexts (lock-free counter)."""
         return self._guard_miss_counter.value()
+
+    # -- contexts ---------------------------------------------------------------
+    def contexts(self) -> list:
+        """Keys of every materialized context."""
+        return list(self._ctx_map)
+
+    def context(self, key: Any = None) -> ContextView:
+        """A :class:`ContextView` bound to ``key`` (default context when
+        ``None``), materializing its state if needed."""
+        key = DEFAULT_CONTEXT if key is None else key
+        return ContextView(self, key, self._ctx(key))
+
+    def seed_spec_state(self, encoded_key: str, config: Config) -> None:
+        """Stage a restored configuration for a context that may not exist
+        yet; it is applied (best-effort) when the context first
+        materializes.  Already-materialized contexts are specialized now."""
+        self._seeded[encoded_key] = dict(config)
+        for key, _ in list(self._ctx_map.items()):
+            if encode_context_key(key) == encoded_key:
+                self._apply_seed(key)
+
+    def seeded_config(self, key: Any) -> dict | None:
+        """The restored configuration staged for ``key``, if any."""
+        cfg = self._seeded.get(encode_context_key(key))
+        return dict(cfg) if cfg is not None else None
+
+    def _apply_seed(self, key: Any) -> None:
+        cfg = self._seeded.get(encode_context_key(key))
+        if cfg is None:
+            return
+        try:
+            self.specialize(cfg, wait=False, context=key)
+        except Exception as e:
+            # Same best-effort contract as restore_spec_state: a stale
+            # config must degrade to generic, never break dispatch.
+            logger.warning("seeded spec state for %r context %r no longer "
+                           "valid (%s: %s); keeping generic", self.name, key,
+                           type(e).__name__, e)
+
+    def _reject_unhashable(self, key: Any) -> None:
+        raise TypeError(
+            f"context keys must be hashable; context_fn for handler "
+            f"{self.name!r} returned {key!r}") from None
+
+    def _materialize_context(self, key: Any) -> _Context:
+        with self._create_lock:
+            try:
+                ctx = self._ctx_map.get(key)
+            except TypeError:
+                self._reject_unhashable(key)
+            if ctx is not None:
+                return ctx
+            # The contextless handler's default context shares the handler
+            # counter (single-bump fast path).  A contextual handler's
+            # default context keeps its own: handler.tput aggregates all
+            # contexts there, so sharing would credit every call to
+            # "default" (and e.g. make controllers explore an idle context).
+            tput = (self.tput
+                    if key == DEFAULT_CONTEXT and self._context_fn is None
+                    else ThroughputCounter())
+            ctx = _Context(key, tput)
+            # Build the generic variant synchronously: the very first call
+            # routed to a new context must have something to dispatch to.
+            self._install(ctx, {}, wait=True, activate=True)
+            with self._lock:
+                self._contexts[key] = ctx
+                self._ctx_map = dict(self._contexts)
+        self._apply_seed(key)
+        return ctx
+
+    def _ctx(self, context: Any) -> _Context:
+        key = DEFAULT_CONTEXT if context is None else context
+        try:
+            ctx = self._ctx_map.get(key)
+        except TypeError:
+            self._reject_unhashable(key)
+        return ctx if ctx is not None else self._materialize_context(key)
 
     # -- construction of variants ---------------------------------------------
     def _build_variant(self, config: Config, instrument: bool) -> Variant:
@@ -222,20 +416,20 @@ class Handler:
         kw.update(self.runtime.jit_overrides)
         return kw
 
-    def _cache_key(self, variant: Variant) -> str | None:
+    def _cache_key(self, ctx: _Context, variant: Variant) -> str | None:
         cache = self.runtime.variant_cache
-        if cache is None or self._arg_specs is None:
+        if cache is None or ctx.arg_specs is None:
             return None
-        args, kwargs = self._arg_specs
+        args, kwargs = ctx.arg_specs
         return cache.entry_key(
             self.name, config_key(variant.config),
             variant.specialized.instrumented, self._all_jit_kwargs(),
             spec_fingerprint(args, kwargs))
 
-    def _try_cache_load(self, variant: Variant) -> bool:
+    def _try_cache_load(self, ctx: _Context, variant: Variant) -> bool:
         """Probe the persistent cache; on hit, install the AOT executable
         without any XLA compile."""
-        key = self._cache_key(variant)
+        key = self._cache_key(ctx, variant)
         if key is None:
             return False
         t0 = time.perf_counter()
@@ -248,16 +442,16 @@ class Handler:
         self.runtime.compile_service.note_compile(None, cache_hit=True)
         return True
 
-    def _compile_variant(self, variant: Variant) -> None:
-        """AOT-compile against the last observed argument shapes, consulting
-        the persistent variant cache first."""
-        if self._arg_specs is None:
+    def _compile_variant(self, ctx: _Context, variant: Variant) -> None:
+        """AOT-compile against the context's last observed argument shapes,
+        consulting the persistent variant cache first."""
+        if ctx.arg_specs is None:
             return  # no calls yet: compile lazily at first dispatch
         if variant.compiled is not None:
             return
-        if self._try_cache_load(variant):
+        if self._try_cache_load(ctx, variant):
             return
-        args, kwargs = self._arg_specs
+        args, kwargs = ctx.arg_specs
         t0 = time.perf_counter()
         try:
             lowered = variant.jitted.lower(*args, **kwargs)
@@ -266,11 +460,12 @@ class Handler:
             self.runtime.compile_service.note_compile(
                 variant.compile_time_s, cache_hit=False,
                 build_s=variant.build_time_s)
-            cache_key = self._cache_key(variant)
+            cache_key = self._cache_key(ctx, variant)
             if cache_key is not None:
                 self.runtime.variant_cache.store(
                     cache_key, variant.compiled,
                     meta={"handler": self.name,
+                          "context": encode_context_key(ctx.key),
                           "config": {k: repr(v)
                                      for k, v in variant.config.items()}})
         except Exception as e:  # pragma: no cover - defensive
@@ -280,51 +475,59 @@ class Handler:
             variant.compile_time_s = time.perf_counter() - t0
 
     # -- snapshot publication ---------------------------------------------------
-    def _rebuild_snapshot_locked(self) -> None:
-        variant = self._variants[self._active_key]
-        generic = self._variants[self._generic_key]
-        self._snapshot = _Snapshot(variant, generic, self._instr_rate)
+    def _rebuild_snapshot_locked(self, ctx: _Context) -> None:
+        variant = ctx.variants[ctx.active_key]
+        generic = ctx.variants[ctx.generic_key]
+        instr_rate = self._instr_rate if ctx.key == DEFAULT_CONTEXT else 0.0
+        ctx.snapshot = _Snapshot(variant, generic, instr_rate,
+                                 ready=not ctx.need_arg_specs)
+        if ctx.key == DEFAULT_CONTEXT:
+            # Mirror for the contextless fast path (and legacy callers).
+            self._snapshot = ctx.snapshot
+            self._need_arg_specs = ctx.need_arg_specs
 
-    def _publish(self, key: tuple, epoch: int | None) -> None:
-        """Atomically swap the dispatch snapshot — unless a newer activation
-        (or despecialize) has superseded this one."""
+    def _publish(self, ctx: _Context, key: tuple, epoch: int | None) -> None:
+        """Atomically swap the context's dispatch snapshot — unless a newer
+        activation (or despecialize) has superseded this one."""
         with self._lock:
-            if epoch is not None and epoch != self._activate_epoch:
+            if epoch is not None and epoch != ctx.epoch:
                 return
-            if key not in self._variants:
+            if key not in ctx.variants:
                 return
-            self._active_key = key
-            self._rebuild_snapshot_locked()
+            ctx.active_key = key
+            self._rebuild_snapshot_locked(ctx)
 
-    def _next_epoch(self) -> int:
+    def _next_epoch(self, ctx: _Context) -> int:
         with self._lock:
-            self._activate_epoch += 1
-            return self._activate_epoch
+            ctx.epoch += 1
+            return ctx.epoch
 
     # -- install / compile pipeline ---------------------------------------------
-    def _install(self, config: Config, wait: bool, activate: bool,
-                 instrument: bool = False,
+    def _install(self, ctx: _Context, config: Config, wait: bool,
+                 activate: bool, instrument: bool = False,
                  speculative: bool = False) -> concurrent.futures.Future:
-        key = (config_key(config), bool(instrument))
-        epoch = self._next_epoch() if activate else None
+        key = (ctx.key, config_key(config), bool(instrument))
+        epoch = self._next_epoch(ctx) if activate else None
         with self._lock:
-            existing = self._variants.get(key)
+            existing = ctx.variants.get(key)
         svc = self.runtime.compile_service
         if activate:
             # The policy has moved past any still-queued activation for a
-            # different config: cancel before a worker wastes a compile.
+            # different config *in this context*: cancel before a worker
+            # wastes a compile.
             svc.cancel_pending(self.name, keep_keys={key},
-                               max_priority=PRIORITY_ACTIVATE)
+                               max_priority=PRIORITY_ACTIVATE,
+                               key_filter=lambda k: k[0] == ctx.key)
         if existing is not None:
             if activate:
-                self._publish(key, epoch)
+                self._publish(ctx, key, epoch)
             return _done_future(existing)
 
         def build() -> Variant:
             variant = self._build_variant(config, instrument)
-            self._compile_variant(variant)
+            self._compile_variant(ctx, variant)
             with self._lock:
-                variant = self._variants.setdefault(key, variant)
+                variant = ctx.variants.setdefault(key, variant)
             return variant
 
         req = svc.submit(
@@ -337,7 +540,7 @@ class Handler:
             def _on_done(f: concurrent.futures.Future) -> None:
                 if f.cancelled() or f.exception() is not None:
                     return
-                self._publish(key, epoch)
+                self._publish(ctx, key, epoch)
             fut.add_done_callback(_on_done)
         if wait and not fut.cancelled():
             try:
@@ -349,25 +552,31 @@ class Handler:
                     # Worker-side done-callbacks may still be in flight;
                     # publishing here (idempotent) guarantees the swap is
                     # visible when a wait=True caller returns.
-                    self._publish(key, epoch)
+                    self._publish(ctx, key, epoch)
         return fut
 
     # -- paper policy API ------------------------------------------------------
     def specialize(self, config: Config, wait: bool = False,
-                   instrument: bool = False) -> None:
+                   instrument: bool = False, context: Any = None) -> None:
         """Select a specialization configuration (paper ``rt.specialize(c)``).
 
         Compilation happens off the critical path; the trampoline keeps
         dispatching to the previous variant until the new one is ready.
+        ``context`` selects the workload class to specialize (``None`` =
+        the default context, preserving the context-less API).
         """
         self.space.validate({k: v for k, v in config.items() if k in self.space})
-        self._install(config, wait=wait, activate=True, instrument=instrument)
+        ctx = self._ctx(context)
+        self._install(ctx, config, wait=wait, activate=True,
+                      instrument=instrument)
 
-    def prefetch(self, configs: Iterable[Config]) -> int:
+    def prefetch(self, configs: Iterable[Config],
+                 context: Any = None) -> int:
         """Speculatively enqueue builds for upcoming candidates (paper §6.4:
         overlap dwell windows with compilation).  Pending speculative builds
-        for configs *not* in the new set are cancelled — the policy has
-        moved past them.  Returns the number of builds enqueued."""
+        in this context for configs *not* in the new set are cancelled — the
+        policy has moved past them.  Returns the number of builds enqueued."""
+        ctx = self._ctx(context)
         keep_keys: set = set()
         enqueued = 0
         for cfg in configs:
@@ -376,38 +585,49 @@ class Handler:
                     {k: v for k, v in cfg.items() if k in self.space})
             except (KeyError, ValueError):
                 continue
-            key = (config_key(cfg), False)
+            key = (ctx.key, config_key(cfg), False)
             keep_keys.add(key)
             with self._lock:
-                if key in self._variants:
+                if key in ctx.variants:
                     continue
-            fut = self._install(cfg, wait=False, activate=False,
+            fut = self._install(ctx, cfg, wait=False, activate=False,
                                 speculative=True)
             if not fut.cancelled():      # sync runtimes skip speculation
                 enqueued += 1
         self.runtime.compile_service.cancel_pending(
-            self.name, keep_keys=keep_keys, speculative_only=True)
+            self.name, keep_keys=keep_keys, speculative_only=True,
+            key_filter=lambda k: k[0] == ctx.key)
         return enqueued
 
-    def despecialize(self, wait: bool = True) -> None:
+    def despecialize(self, wait: bool = True, context: Any = ...) -> None:
         """Return to the generic variant.
 
-        Pending (not yet started) builds for this handler are cancelled and
-        any in-flight activation is superseded, so a compile finishing later
-        can no longer overwrite the generic swap.  With ``wait=True`` this
-        additionally blocks until in-flight builds for this handler have
-        drained — on return, no background compile work remains for it.
+        ``context`` selects one workload class; the default (no argument)
+        despecializes **every** context.  Pending (not yet started) builds
+        for the targeted context(s) are cancelled and any in-flight
+        activation is superseded, so a compile finishing later can no longer
+        overwrite the generic swap.  With ``wait=True`` this additionally
+        blocks until in-flight builds for this handler have drained — on
+        return, no background compile work remains for it.
         """
-        epoch = self._next_epoch()
-        self.runtime.compile_service.cancel_pending(self.name)
-        self._publish(self._generic_key, epoch)
+        if context is ...:
+            targets = list(self._ctx_map.values())
+        else:
+            targets = [self._ctx(context)]
+        keys = {ctx.key for ctx in targets}
+        self.runtime.compile_service.cancel_pending(
+            self.name, key_filter=lambda k: k[0] in keys)
+        for ctx in targets:
+            epoch = self._next_epoch(ctx)
+            self._publish(ctx, ctx.generic_key, epoch)
         if wait:
             self.runtime.compile_service.drain(self.name)
 
     def enable_instrumentation(self, rate: float = 1.0,
                                collectors: Mapping[str, Callable] | None = None,
                                wait: bool = True) -> None:
-        """Switch to the instrumented variant of the current config.
+        """Switch to the instrumented variant of the current config
+        (default context).
 
         ``rate`` is the sampling rate for *host-side* collectors
         (paper §6.4 / Fig 11).  ``collectors`` maps label ->
@@ -416,18 +636,20 @@ class Handler:
         self._instr_rate = float(rate)
         for label, fn in (collectors or {}).items():
             self.recorders.add_host(label, fn, rate)
+        ctx = self._default
         with self._lock:
-            cfg = dict(self._snapshot.variant.config)
-            self._rebuild_snapshot_locked()   # sampling starts immediately
-        self._install(cfg, wait=wait, activate=True, instrument=True)
+            cfg = dict(ctx.snapshot.variant.config)
+            self._rebuild_snapshot_locked(ctx)   # sampling starts immediately
+        self._install(ctx, cfg, wait=wait, activate=True, instrument=True)
 
     def disable_instrumentation(self) -> None:
         self._instr_rate = 0.0
+        ctx = self._default
         with self._lock:
-            active = self._snapshot.variant
-            self._rebuild_snapshot_locked()
+            active = ctx.snapshot.variant
+            self._rebuild_snapshot_locked(ctx)
         if active.specialized.instrumented:
-            self._install(active.config, wait=True, activate=True,
+            self._install(ctx, active.config, wait=True, activate=True,
                           instrument=False)
 
     def spec_space(self) -> SpecSpace:
@@ -438,43 +660,83 @@ class Handler:
         return self.space
 
     # -- stats -----------------------------------------------------------------
-    def active_config(self) -> dict:
-        snap = self._snapshot
-        return dict(snap.variant.config) if snap is not None else {}
+    def active_config(self, context: Any = None) -> dict:
+        key = DEFAULT_CONTEXT if context is None else context
+        ctx = self._ctx_map.get(key)
+        if ctx is None or ctx.snapshot is None:
+            return {}
+        return dict(ctx.snapshot.variant.config)
+
+    def spec_state(self) -> dict:
+        """Active configuration per context, keyed by encoded context key
+        (what ``spec_state.json`` persists).
+
+        Restored-but-not-yet-materialized contexts (seeds whose traffic has
+        not arrived this run) are carried through, so a save never drops a
+        tuned config that a previous run already paid to find.
+        """
+        out = {enc: dict(cfg) for enc, cfg in self._seeded.items()}
+        for key in self._ctx_map:
+            enc = encode_context_key(key)
+            cfg = self.active_config(context=key)
+            # An empty active config on a seeded context usually means the
+            # seeded specialize has not landed yet (async compile): the
+            # seed is the better record to persist.
+            if cfg or enc not in out:
+                out[enc] = cfg
+        return out
 
     def variants(self) -> list[Variant]:
         with self._lock:
-            return list(self._variants.values())
+            return [v for ctx in self._contexts.values()
+                    for v in ctx.variants.values()]
 
     def stats(self) -> dict:
         with self._lock:
-            vs = list(self._variants.items())
-            active = (self._variants.get(self._active_key)
-                      if self._active_key is not None else None)
+            ctxs = list(self._contexts.values())
+            vs = [(k, v) for ctx in ctxs for k, v in ctx.variants.items()]
+            per_context = {}
+            for ctx in ctxs:
+                active = (ctx.variants.get(ctx.active_key)
+                          if ctx.active_key is not None else None)
+                per_context[encode_context_key(ctx.key)] = {
+                    "variants": len(ctx.variants),
+                    "calls": ctx.tput.total(),
+                    "guard_misses": ctx.guard_misses.value(),
+                    "active": (dict(active.config)
+                               if active is not None else None),
+                    "tput_window": ctx.window.summary(),
+                }
+            default = self._contexts.get(DEFAULT_CONTEXT)
+            active = (default.variants.get(default.active_key)
+                      if default is not None and default.active_key is not None
+                      else None)
         return {
             "variants": len(vs),
+            "contexts": per_context,
             "guard_misses": self.guard_misses,
             "active": dict(active.config) if active is not None else None,
             "aot_compiled": sum(1 for _, v in vs if v.compiled is not None),
             "from_cache": sum(1 for _, v in vs if v.from_cache),
             "compile_times_s": {
-                str(dict(k[0])): v.compile_time_s for k, v in vs
+                str(dict(k[1])): v.compile_time_s for k, v in vs
                 if v.compile_time_s is not None
             },
         }
 
-    # -- argument-spec capture (once, then the flag stays down) -----------------
-    def _capture_arg_specs(self, args: tuple, kwargs: dict) -> None:
+    # -- argument-spec capture (once per context, then the flag stays down) ------
+    def _capture_arg_specs(self, ctx: _Context, args: tuple,
+                           kwargs: dict) -> None:
         with self._lock:
-            if not self._need_arg_specs:
+            if not ctx.need_arg_specs:
                 return
-            self._arg_specs = (
+            ctx.arg_specs = (
                 jax.tree_util.tree_map(_abstractify, args),
                 jax.tree_util.tree_map(_abstractify, kwargs),
             )
-            self._need_arg_specs = False
-            items = list(self._variants.items())
-            active_key = self._active_key
+            ctx.need_arg_specs = False
+            items = list(ctx.variants.items())
+            active_key = ctx.active_key
         # Now that shapes are known: probe the persistent cache for every
         # installed-but-uncompiled variant (a warm restart hits here and
         # reaches its AOT executables with zero recompiles), then schedule
@@ -483,11 +745,11 @@ class Handler:
         for key, variant in items:
             if variant.compiled is not None:
                 continue
-            if self._try_cache_load(variant):
+            if self._try_cache_load(ctx, variant):
                 continue
 
             def build(v: Variant = variant) -> Variant:
-                self._compile_variant(v)
+                self._compile_variant(ctx, v)
                 return v
 
             # Non-active variants are speculative backfills: a synchronous
@@ -498,32 +760,53 @@ class Handler:
                                  else PRIORITY_SPECULATIVE),
                        speculative=key != active_key)
         with self._lock:
-            self._rebuild_snapshot_locked()
+            self._rebuild_snapshot_locked(ctx)
 
     # -- the trampoline itself ---------------------------------------------------
     def __call__(self, *args, **kwargs):
-        # Lock-free fast path: one snapshot reference read; guardless,
-        # uninstrumented variants dispatch straight to the compiled
-        # executable.  All remaining bookkeeping is either lock-free
-        # (AtomicCounter bumps) or disabled.
-        snap = self._snapshot
-        if snap.fast is not None and not self._need_arg_specs:
+        # Lock-free fast path: one snapshot reference read (plus, for
+        # contextual handlers, the workload classification and one dict
+        # probe on the immutable context map); guardless, uninstrumented
+        # variants dispatch straight to the compiled executable.  All
+        # remaining bookkeeping is either lock-free (AtomicCounter bumps)
+        # or disabled.
+        ctx_fn = self._context_fn
+        if ctx_fn is None:
+            snap = self._snapshot
+            if snap.fast is not None:
+                if self.count_calls:
+                    self.tput.add()
+                return snap.fast(*args, **kwargs)
+            return self._call_slow(self._default, snap, args, kwargs)
+        key = ctx_fn(args, kwargs)
+        try:
+            ctx = self._ctx_map.get(key)
+        except TypeError:
+            self._reject_unhashable(key)
+        if ctx is None:
+            ctx = self._materialize_context(key)
+        snap = ctx.snapshot
+        if snap.fast is not None:
             if self.count_calls:
                 self.tput.add()
+            if ctx.tput is not self.tput:
+                ctx.tput.add()
             return snap.fast(*args, **kwargs)
-        return self._call_slow(snap, args, kwargs)
+        return self._call_slow(ctx, snap, args, kwargs)
 
-    def _call_slow(self, snap: _Snapshot, args: tuple, kwargs: dict):
-        if self._need_arg_specs:
+    def _call_slow(self, ctx: _Context, snap: _Snapshot, args: tuple,
+                   kwargs: dict):
+        if ctx.need_arg_specs:
             # Record argument specs so variants AOT-compile off-path (and
             # warm restarts can load their cached executables).
-            self._capture_arg_specs(args, kwargs)
-            snap = self._snapshot
+            self._capture_arg_specs(ctx, args, kwargs)
+            snap = ctx.snapshot
         variant = snap.variant
         # Host-side specialization guards (paper §4.4.3): on miss, fall back
         # to the generic variant for this invocation.
         if snap.guard_fn is not None and not snap.guard_fn(args, kwargs):
             variant._guard_misses.bump()
+            ctx.guard_misses.bump()
             self._guard_miss_counter.bump()
             variant = snap.generic
         # Host-side instrumentation sampling.
@@ -537,6 +820,8 @@ class Handler:
             self.recorders.absorb_taps(taps)
         if self.count_calls:
             self.tput.add()
+        if ctx.tput is not self.tput:
+            ctx.tput.add()
         return out
 
 
@@ -558,11 +843,18 @@ class IridescentRuntime:
 
     # -- registration ----------------------------------------------------------
     def register(self, name: str, builder: Callable,
+                 context_fn: Callable[[tuple, dict], Any] | None = None,
                  **jit_kwargs: Any) -> Handler:
-        """Register handler code; analogous to loading ``handler_code.ll``."""
+        """Register handler code; analogous to loading ``handler_code.ll``.
+
+        ``context_fn(args, kwargs) -> hashable`` classifies each call into a
+        workload context; each context keeps its own active specialization
+        (one dispatch snapshot per batch-shape class).  ``None`` = one
+        global context (the default).
+        """
         if name in self.handlers:
             raise ValueError(f"handler {name!r} already registered")
-        h = Handler(name, builder, self, jit_kwargs)
+        h = Handler(name, builder, self, jit_kwargs, context_fn=context_fn)
         self.handlers[name] = h
         return h
 
@@ -596,23 +888,26 @@ class IridescentRuntime:
         return merged
 
     def specialize(self, config: Config, handler: str | None = None,
-                   wait: bool = False) -> None:
+                   wait: bool = False, context: Any = None) -> None:
         """``rt.specialize(c)`` — apply a configuration.
 
         With ``handler=None`` the config is routed to every handler, each
-        receiving the subset of points it declared.
+        receiving the subset of points it declared.  ``context`` selects the
+        workload context (default: the default context, so the legacy
+        context-less call keeps working unchanged).
         """
         targets = ([self.handlers[handler]] if handler is not None
                    else list(self.handlers.values()))
         for h in targets:
             sub = {k: v for k, v in config.items() if k in h.spec_space()}
-            h.specialize(sub, wait=wait)
+            h.specialize(sub, wait=wait, context=context)
 
     # -- persistence & telemetry -------------------------------------------------
     def spec_state(self) -> dict:
-        """Active configuration per handler (repr-serializable only when
-        configs are; the launch drivers persist this next to checkpoints)."""
-        return {name: h.active_config() for name, h in self.handlers.items()}
+        """Active configuration per handler per context (encoded context key
+        -> config; repr-serializable only when configs are; the launch
+        drivers persist this next to checkpoints)."""
+        return {name: h.spec_state() for name, h in self.handlers.items()}
 
     def compile_stats(self) -> dict:
         """Aggregate compile telemetry: service counters + cache stats."""

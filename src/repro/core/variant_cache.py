@@ -64,23 +64,31 @@ def backend_fingerprint() -> str:
 class CacheStats:
     """Lock-free counters (loads/stores run on concurrent compile workers)."""
 
-    __slots__ = ("hits", "misses", "stores", "errors")
+    __slots__ = ("hits", "misses", "stores", "errors", "evictions")
 
     def __init__(self):
         self.hits = AtomicCounter()
         self.misses = AtomicCounter()
         self.stores = AtomicCounter()
         self.errors = AtomicCounter()
+        self.evictions = AtomicCounter()
 
     def as_dict(self) -> dict:
         return {name: getattr(self, name).value() for name in self.__slots__}
 
 
 class VariantCache:
-    """Disk cache of serialized AOT executables (see module docstring)."""
+    """Disk cache of serialized AOT executables (see module docstring).
 
-    def __init__(self, directory: str):
+    ``max_bytes`` caps the on-disk size: when an insert pushes the total
+    over the cap, the least-recently-used entries (by file mtime — loads
+    touch their entry, so mtime tracks last use, not last write) are
+    evicted until the cache fits again.  ``None`` = unbounded.
+    """
+
+    def __init__(self, directory: str, max_bytes: int | None = None):
         self.directory = str(directory)
+        self.max_bytes = max_bytes
         os.makedirs(self.directory, exist_ok=True)
         self._lock = threading.Lock()
         self.stats = CacheStats()
@@ -114,6 +122,10 @@ class VariantCache:
             compiled = serialize_executable.deserialize_and_load(
                 blob, in_tree, out_tree)
             self.stats.hits.bump()
+            try:
+                os.utime(path, None)     # refresh last_used for LRU eviction
+            except OSError:
+                pass
             return compiled
         except Exception as e:
             # Corrupt / stale / cross-version entry: drop it and recompile.
@@ -170,8 +182,43 @@ class VariantCache:
                     except OSError:
                         pass
                 return False
+            if self.max_bytes is not None:
+                self._evict_lru_locked(keep=path)
         self.stats.stores.bump()
         return True
+
+    def _evict_lru_locked(self, keep: str | None = None) -> int:
+        """Evict least-recently-used entries until the cache fits
+        ``max_bytes``.  The just-written entry (``keep``) survives even when
+        it alone exceeds the cap — evicting what was just stored would make
+        the cache useless for oversized-but-only entries."""
+        entries = []
+        for name in os.listdir(self.directory):
+            if not name.endswith(_SUFFIX):
+                continue
+            path = os.path.join(self.directory, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, path))
+        total = sum(size for _, size, _ in entries)
+        evicted = 0
+        for _, size, path in sorted(entries):   # oldest last_used first
+            if total <= self.max_bytes:
+                break
+            if path == keep:
+                continue
+            try:
+                os.unlink(path)
+            except OSError:
+                continue
+            total -= size
+            evicted += 1
+            self.stats.evictions.bump()
+            logger.info("variant cache evicted LRU entry %s (%d bytes)",
+                        os.path.basename(path), size)
+        return evicted
 
     # -- maintenance -----------------------------------------------------------
     def entries(self) -> list[str]:

@@ -6,12 +6,19 @@ iteration chains for the three selected (arch x shape) cells, writing tagged
 artifacts next to the baselines.  Each entry is one iteration: the spec
 config *delta* is cumulative within a chain.
 
+Each chain is driven by the library :class:`~repro.core.Controller` in
+offline mode (``measure=``): the chain's cumulative configs become an
+``ExhaustiveSweep`` candidate list and the controller owns the
+propose -> measure -> observe loop; ``measure`` lowers the cell on the
+production mesh (surrogate roofline) and writes the tagged artifact.
+
 The narrative (hypothesis / predicted effect) lives in EXPERIMENTS.md §Perf;
 this driver produces the measured numbers it cites.
 """
 import json
 import time
 
+from repro.core import Controller, ExhaustiveSweep
 from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh
 from repro.optim import OptConfig
@@ -87,11 +94,20 @@ def main() -> None:
     for (arch, shape), chain in CHAINS.items():
         if args.cell != "all" and args.cell != f"{arch}:{shape}":
             continue
-        for tag, spec in chain:
+        # Tags are metadata on each chain step; the controller proposes the
+        # cumulative configs in chain order (an exhaustive sweep *is* the
+        # hypothesis chain) and observes the surrogate roofline metric.
+        tag_of = {json.dumps(spec, sort_keys=True, default=repr): tag
+                  for tag, spec in chain}
+
+        def measure(spec, arch=arch, shape=shape, tag_of=tag_of):
+            tag = tag_of[json.dumps(spec, sort_keys=True, default=repr)]
             fn = os.path.join(outdir, f"{arch}__{shape}__{tag}.json")
             if os.path.exists(fn):
                 print(f"skip {tag} (exists)")
-                continue
+                with open(fn) as f:
+                    res = json.load(f)
+                return _metric(res)
             print(f"=== {arch} {shape} [{tag}] spec={spec}", flush=True)
             t0 = time.perf_counter()
             try:
@@ -109,10 +125,29 @@ def main() -> None:
                       f"useful={rf['useful_flops_ratio']:.3f} "
                       f"temp={res['full']['memory'].get('temp_size_in_bytes', 0)/2**30:.1f}GiB",
                       flush=True)
+                return _metric(res)
             except Exception as e:
                 import traceback
                 traceback.print_exc()
                 print(f"  FAILED {tag}: {e}", flush=True)
+                return float("-inf")
+
+        ctl = Controller(policy=ExhaustiveSweep([spec for _, spec in chain]),
+                         measure=measure)
+        best, metric = ctl.run()
+        if best is not None and metric != float("-inf"):
+            best_tag = tag_of[json.dumps(best, sort_keys=True, default=repr)]
+            print(f"--- {arch} {shape}: best step [{best_tag}] "
+                  f"(1/roofline_s={metric:.3f})", flush=True)
+
+
+def _metric(res: dict) -> float:
+    """Higher-is-better scalar from a dry-run artifact: reciprocal of the
+    total roofline time (compute + memory + collective)."""
+    rf = res.get("roofline") or {}
+    total = (rf.get("compute_s", 0.0) + rf.get("memory_s", 0.0)
+             + rf.get("collective_s", 0.0))
+    return 1.0 / total if total > 0 else float("-inf")
 
 
 if __name__ == "__main__":

@@ -4,15 +4,16 @@ adaptation (the paper's TAS/FastClick scenario on an LM).
 Run:
     PYTHONPATH=src python -m repro.launch.serve --steps 300
 
-The server decodes token batches against a KV cache; the Iridescent policy
-explores decode spec points (cache dtype, chunk length for recurrent archs)
-guided by measured tokens/s and re-explores when the request distribution
-shifts.
+The server decodes token batches against a KV cache; the Iridescent
+``Controller`` explores decode spec points (cache dtype, chunk length for
+recurrent archs) guided by measured tokens/s and re-explores when the
+request distribution shifts.  There is no hand-rolled propose/observe loop
+here: the fixed code calls the handler, then ``controller.step()``.
 
 With ``--cache-dir`` the runtime persists every variant's AOT executable
-(and the tuned configuration) across restarts: a warm restart loads its
-serialized executables instead of recompiling — ``compile_stats()`` on the
-second run reports ``xla_compiles == 0`` for previously seen configs.
+(and the tuned per-context configuration) across restarts: a warm restart
+loads its serialized executables instead of recompiling — ``compile_stats()``
+on the second run reports ``xla_compiles == 0`` for previously seen configs.
 """
 from __future__ import annotations
 
@@ -23,12 +24,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import restore_spec_state, save_spec_state
-from repro.core import (ChangeDetector, ExhaustiveSweep, Explorer,
-                        IridescentRuntime, Phase)
+from repro.core import (ChangeDetector, Controller, DEFAULT_CONTEXT,
+                        ExhaustiveSweep, IridescentRuntime)
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
 from repro.training import make_decode_builder
@@ -45,6 +45,10 @@ def main() -> None:
                     help="CompileService worker threads")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="speculative compiles ahead of the policy")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="skip candidates whose expected compile cost "
+                         "exceeds BUDGET x the expected dwell time "
+                         "(CompileService telemetry; default: no gating)")
     ap.add_argument("--cache-dir", default=None,
                     help="persist AOT executables + tuned config here; a "
                          "warm restart then performs zero recompiles")
@@ -67,22 +71,25 @@ def main() -> None:
 
     spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
                       if args.cache_dir else None)
-    tuned_config = None
+    initial_configs = None
     if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
-        tuned_config = handler.active_config()
-        print(f"restored tuned config: {tuned_config}")
+        tuned = handler.active_config()
+        if tuned:
+            initial_configs = {DEFAULT_CONTEXT: tuned}
+            print(f"restored tuned config: {tuned}")
 
     # decode spec points + the kernel-implementation choice (the registry
     # candidates are host-filtered, so on CPU this sweeps xla_ref vs the
     # interpreter and converges on xla_ref by measured tok/s).
+    space = handler.spec_space()
     labels = ["cache_dtype", "rmsnorm_impl"] + (
         ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
-    explorer = Explorer(
+    controller = Controller(
         handler,
-        ExhaustiveSweep.from_space(handler.spec_space(), labels),
-        dwell=args.dwell, change_detector=ChangeDetector(0.3),
-        wait_compiles=False, prefetch=args.prefetch,
-        initial_config=tuned_config)
+        lambda: ExhaustiveSweep.from_space(space, labels),
+        dwell=args.dwell, change_detector=lambda: ChangeDetector(0.3),
+        wait_compiles=False, prefetch=args.prefetch, budget=args.budget,
+        initial_configs=initial_configs)
 
     t0 = time.perf_counter()
     done = 0
@@ -90,19 +97,19 @@ def main() -> None:
         pos = jnp.int32(step % args.max_len)
         logits, cache = handler(params, cache, tokens, pos)
         tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-        explorer.step()
+        controller.step()
         done += args.batch
         if (step + 1) % 40 == 0:
             dt = time.perf_counter() - t0
             print(f"step {step + 1:4d} tok/s={done / dt:,.0f} "
                   f"config={handler.active_config()}")
     print(f"served {done} tokens; variants: {len(handler.variants())}")
-    best, metric = explorer.policy.best()
+    best, metric = controller.best()
     print(f"best config: {best}")
     print(f"compile stats: {json.dumps(rt.compile_stats())}")
-    # Persist the tuned config only if the explorer has settled — a
+    # Persist the tuned configs only if the controller has settled — a
     # mid-sweep candidate must not become the next restart's "winner".
-    if spec_state_path and explorer.phase is Phase.EXPLOIT:
+    if spec_state_path and controller.settled():
         save_spec_state(spec_state_path, rt)
     rt.shutdown()
 

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.core import (ChangeDetector, CoordinateDescent, Explorer,
-                        IridescentRuntime, Phase)
+from repro.core import (ChangeDetector, Controller, CoordinateDescent,
+                        DEFAULT_CONTEXT, IridescentRuntime)
 from repro.data import SyntheticLM
 from repro.models import ModelConfig
 from repro.models import transformer as model
@@ -63,6 +63,9 @@ def main() -> None:
                     help="CompileService worker threads")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="speculative compiles ahead of the policy")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="skip candidates whose expected compile cost "
+                         "exceeds BUDGET x the expected dwell time")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch).replace(compute_dtype="float32")
@@ -85,38 +88,41 @@ def main() -> None:
     params = model.init_params(jax.random.PRNGKey(0), cfg)
     state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
     start_step = 0
-    tuned_config = None
+    initial_configs = None
     if mgr and mgr.latest_step() is not None:
         state, meta = mgr.restore(state)
         start_step = meta["step"]
         print(f"resumed from step {start_step}")
         if mgr.restore_spec_state(rt, wait=True):
-            tuned_config = handler.active_config()
-            print(f"restored tuned config: {tuned_config}")
+            tuned = handler.active_config()
+            if tuned:
+                initial_configs = {DEFAULT_CONTEXT: tuned}
+                print(f"restored tuned config: {tuned}")
 
     ds = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=1,
                      start_step=start_step)
     it = iter(ds)
 
-    explorer = None
+    controller = None
     if args.explore:
         space = handler.spec_space()
-        policy = CoordinateDescent(
-            space,
-            labels=["remat", "microbatch", "logits_dtype", "rmsnorm_impl"],
-            max_passes=1)
-        explorer = Explorer(handler, policy, dwell=args.dwell,
-                            metric_fn=lambda: handler.tput.read(),
-                            change_detector=ChangeDetector(0.3),
-                            wait_compiles=False, prefetch=args.prefetch,
-                            initial_config=tuned_config)
+        controller = Controller(
+            handler,
+            lambda: CoordinateDescent(
+                space,
+                labels=["remat", "microbatch", "logits_dtype",
+                        "rmsnorm_impl"],
+                max_passes=1),
+            dwell=args.dwell, change_detector=lambda: ChangeDetector(0.3),
+            wait_compiles=False, prefetch=args.prefetch, budget=args.budget,
+            initial_configs=initial_configs)
 
     t0 = time.perf_counter()
     for step in range(start_step, args.steps):
         batch = next(it)
         state, metrics = handler(state, batch)
-        if explorer is not None:
-            explorer.step()
+        if controller is not None:
+            controller.step()
         if (step + 1) % 10 == 0 or step == start_step:
             dt = time.perf_counter() - t0
             print(f"step {step + 1:4d} loss={float(metrics['loss']):.4f} "
@@ -124,20 +130,20 @@ def main() -> None:
                   f"config={handler.active_config()}")
         if mgr and (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1, state)   # async, off critical path
-            # Persist the tuned config only once the explorer has settled:
-            # saving a mid-sweep candidate would make the next warm restart
-            # exploit an arbitrary (possibly worst) config.
-            if explorer is None or explorer.phase is Phase.EXPLOIT:
+            # Persist the tuned configs only once the controller has
+            # settled: saving a mid-sweep candidate would make the next
+            # warm restart exploit an arbitrary (possibly worst) config.
+            if controller is None or controller.settled():
                 mgr.save_spec_state(rt)
     if mgr:
         mgr.wait()
-        if explorer is None or explorer.phase is Phase.EXPLOIT:
+        if controller is None or controller.settled():
             mgr.save_spec_state(rt)
     print(f"done. variants compiled: {len(handler.variants())}; "
           f"guard misses: {handler.guard_misses}")
     print(f"compile stats: {rt.compile_stats()}")
-    if explorer is not None:
-        best, metric = explorer.policy.best()
+    if controller is not None:
+        best, metric = controller.best()
         print(f"best config: {best} ({metric:.2f} steps/s)")
     rt.shutdown()
 

@@ -100,3 +100,24 @@ def test_range_point(lo, extra):
     cands = p.candidates()
     assert cands[0] == lo and cands[-1] == hi
     assert len(cands) == extra + 1
+
+
+@pytest.mark.parametrize("step", [0, -1, -0.5, None])
+def test_range_point_nonpositive_step_rejected(step):
+    """Regression: step <= 0 used to make candidates() loop forever; it
+    must be rejected at construction with a clear error."""
+    with pytest.raises(ValueError, match="step > 0"):
+        RangePoint("r", 0, lo=0, hi=8, step=step)
+
+
+def test_range_point_fractional_step_ok():
+    p = RangePoint("r", 0.0, lo=0.0, hi=1.0, step=0.5)
+    assert list(p.candidates()) == [0.0, 0.5, 1.0]
+
+
+def test_spec_ctx_range_nonpositive_step_rejected():
+    def b(spec):
+        spec.range("r", 1, 1, 8, step=0)
+        return lambda: None
+    with pytest.raises(ValueError, match="step > 0"):
+        specialize_builder(b, {})

@@ -4,8 +4,9 @@ import math
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (ChangeDetector, CoordinateDescent, EpsilonGreedy,
-                        ExhaustiveSweep, SuccessiveHalving)
+from repro.core import (ChangeDetector, ContextualBandit, CoordinateDescent,
+                        EpsilonGreedy, ExhaustiveSweep, ScoreBoard,
+                        SuccessiveHalving)
 from repro.core.points import EnumPoint, SpecSpace
 
 
@@ -94,3 +95,118 @@ def test_change_detector_ignores_noise():
     cd = ChangeDetector(threshold=0.25, warmup=2)
     vals = [100, 102, 98, 101, 99, 103, 97, 100]
     assert not any(cd.update(v) for v in vals)
+
+
+# --- peek(n) across all shipped policies ----------------------------------------
+
+def test_exhaustive_peek_does_not_consume():
+    pol = ExhaustiveSweep([{"x": i} for i in range(4)])
+    assert pol.peek(2) == [{"x": 0}, {"x": 1}]
+    assert pol.peek(10) == [{"x": i} for i in range(4)]   # clamped
+    assert pol.propose() == {"x": 0}                      # unchanged by peek
+    assert pol.peek(1) == [{"x": 1}]
+
+
+def test_coordinate_descent_peek_stops_at_axis_edge():
+    """Only the remainder of the current axis is metric-independent: the
+    next axis re-pins to whatever incumbent wins this one."""
+    space = _space({"a": (0, 1, 2), "b": (0, 1)})
+    pol = CoordinateDescent(space)
+    first = pol.propose()
+    upcoming = pol.peek(10)
+    assert upcoming                                        # rest of axis 'a'
+    assert all(set(c) == set(first) for c in upcoming)
+    assert all(c["b"] == first["b"] for c in upcoming)     # axis 'b' pinned
+    # peeked configs come back from propose() in the same order
+    for expect in upcoming:
+        assert pol.propose() == expect
+
+
+def test_epsilon_greedy_peek_covers_unseen_only():
+    cands = [{"x": i} for i in range(3)]
+    pol = EpsilonGreedy(cands, eps=0.0, seed=0)
+    assert pol.peek(5) == cands                            # initial sweep
+    for cfg in cands:
+        assert pol.propose() == cfg
+        pol.observe(cfg, float(cfg["x"]))
+    assert pol.peek(5) == []      # exploitation: next pick is metric-driven
+
+
+def test_successive_halving_peek_stops_at_rung_edge():
+    cands = [{"x": i} for i in range(4)]
+    pol = SuccessiveHalving(cands)
+    assert pol.peek(10) == cands                           # full first rung
+    for cfg in cands:
+        assert pol.propose() == cfg
+        pol.observe(cfg, float(cfg["x"]))
+    assert pol.peek(10) == []     # survivors depend on this rung's scores
+
+
+def test_contextual_bandit_peek_covers_unpulled_arms_only():
+    pol = ContextualBandit([{"x": i} for i in range(3)], rounds=10)
+    assert pol.peek(5) == [{"x": 0}, {"x": 1}, {"x": 2}]
+    cfg = pol.propose()
+    pol.observe(cfg, 1.0)
+    assert pol.peek(5) == [{"x": 1}, {"x": 2}]
+    for _ in range(2):
+        pol.observe(pol.propose(), 1.0)
+    assert pol.peek(5) == []      # all arms pulled: UCB is metric-driven
+
+
+def test_peek_returns_copies():
+    pol = ExhaustiveSweep([{"x": 0}])
+    peeked = pol.peek(1)[0]
+    peeked["x"] = 99
+    assert pol.propose() == {"x": 0}                       # not aliased
+
+
+# --- ScoreBoard / best() tie-breaking -------------------------------------------
+
+def test_scoreboard_tie_breaks_to_first_observed():
+    board = ScoreBoard()
+    board.observe({"x": "late_tie"}, 1.0)
+    board.observe({"x": "winner"}, 2.0)
+    board.observe({"x": "tie"}, 2.0)                       # same metric, later
+    assert board.best()[0] == {"x": "winner"}
+
+
+def test_scoreboard_refresh_keeps_insertion_order():
+    board = ScoreBoard()
+    board.observe({"x": "a"}, 2.0)
+    board.observe({"x": "b"}, 2.0)
+    board.observe({"x": "a"}, 2.0)     # re-observation must not demote 'a'
+    assert board.best()[0] == {"x": "a"}
+
+
+@pytest.mark.parametrize("make", [
+    lambda c: ExhaustiveSweep(c),
+    lambda c: EpsilonGreedy(c, eps=0.0, seed=0),
+    lambda c: SuccessiveHalving(c),
+    lambda c: ContextualBandit(c, rounds=len(c)),
+])
+def test_best_tie_break_deterministic_across_policies(make):
+    """All shipped policies break best() ties to the earliest-observed
+    candidate (candidate order), so equal-metric sweeps are reproducible."""
+    cands = [{"x": i} for i in range(4)]
+    pol = make(cands)
+    while True:
+        cfg = pol.propose()
+        if cfg is None:
+            break
+        pol.observe(cfg, 1.0)                              # all metrics equal
+        if isinstance(pol, EpsilonGreedy) and pol.peek(1) == []:
+            break                  # eps=0 exploitation loops forever
+    assert pol.best()[0] == cands[0]
+
+
+def test_coordinate_descent_best_tie_keeps_incumbent():
+    space = _space({"a": (0, 1, 2)})
+    pol = CoordinateDescent(space)
+    first = pol.propose()
+    pol.observe(first, 1.0)
+    while True:
+        cfg = pol.propose()
+        if cfg is None:
+            break
+        pol.observe(cfg, 1.0)      # ties: strictly-greater required to adopt
+    assert pol.best()[0] == first
