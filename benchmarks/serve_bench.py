@@ -17,11 +17,24 @@ tracked by:
                              handler, ``context_fn`` = batch size, one
                              Controller; each batch-shape class settles on
                              its own specialization (the contexts converge
-                             to *different* configs).
+                             to *different* configs),
+* ``open_loop``            — the continuous-batching ServeEngine under
+                             open-loop load (deterministic pseudo-Poisson
+                             arrivals, mixed decode budgets, a rate ramp):
+                             the same arrival schedule is served twice —
+                             once with Controller-tuned bucket boundaries,
+                             once with a fixed single bucket — recording
+                             tok/s, goodput (in-SLO tok/s), p50/p95/p99
+                             latency, shed counts, and the bucket scheme
+                             the tuner settles on.  The SLO and arrival
+                             rate are calibrated from measured step costs,
+                             so the comparison is meaningful on hosts of
+                             very different speeds.
 
 CLI:
     PYTHONPATH=src:. python -m benchmarks.serve_bench \
         --steps 120 --out BENCH_serve.json
+    PYTHONPATH=src:. python -m benchmarks.serve_bench --scenario open_loop
 
 Also runs under ``benchmarks/run.py`` (module name ``serve``), where it
 writes ``BENCH_serve.json`` to the CWD (override with $BENCH_SERVE_JSON).
@@ -200,6 +213,272 @@ def run_mixed(steps: int = 360, batches=(1, 64), d: int = 128,
     }
 
 
+def _open_loop_builder(spec):
+    """Bench handler: fused matmul vs a generic split-and-concat form.
+
+    The per-bucket Controller sweep settles each bucket context on the
+    faster form by measured rate — the "specialization pays" half of the
+    scenario; the batcher's bucket tuning is the other half.  The generic
+    form is deliberately only *mildly* slower (an extra concat + worse
+    blocking), so exploration dwells perturb latency instead of wrecking
+    it."""
+    fused = spec.enum("fused", False, (False, True), guarded=False)
+
+    def f(x, w):
+        if fused:
+            return x @ w
+        h = w.shape[1] // 2
+        return jnp.concatenate([x @ w[:, :h], x @ w[:, h:]], axis=-1)
+
+    return f
+
+
+def _calibrate_step_cost(d: int, batches, reps: int = 7) -> dict:
+    """Median seconds per *effective* decode step at each batch size.
+
+    Measured through a registered contextual handler plus a bucket-plan
+    tick — i.e. the same per-step work the engine's executor does (array
+    build, contextual trampoline dispatch, tuner tick), not a bare jit
+    call; on hosts where dispatch overhead rivals the matmul this is the
+    number that decides whether an SLO is meetable."""
+    from repro.serve.batcher import bucket_plan_builder as _plan_builder
+
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("calib_step", _open_loop_builder,
+                          context_fn=lambda a, k: int(a[0].shape[0]))
+    plan = rt.register("calib_plan", _plan_builder(["a", "b"], "a"))
+    w = jnp.zeros((d, d), jnp.float32)
+    tick = jnp.int32(0)
+    out = {}
+    for b in batches:
+        jax.block_until_ready(handler(jnp.zeros((b, d), jnp.float32), w))
+        handler.specialize({"fused": True}, context=b, wait=True)
+        jax.block_until_ready(handler(jnp.zeros((b, d), jnp.float32), w))
+        plan(tick)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            x = jnp.zeros((b, d), jnp.float32)
+            y = handler(x, w)
+            plan(tick)
+            jax.block_until_ready(y)
+            ts.append(time.perf_counter() - t0)
+        out[b] = sorted(ts)[len(ts) // 2]
+    rt.shutdown()
+    return out
+
+
+def _calibrate_engine_overhead(steps: int = 60) -> float:
+    """Median per-step cost of the serve machinery itself (queue, pack,
+    scheduler, tuner tick, controller scan — everything but the model):
+    one request decoding through a no-op executor with the full tuned-run
+    engine attached.  Folded into the SLO calibration so the scenario is
+    meaningful on hosts where dispatch overhead rivals the model cost."""
+    from repro.core.metrics import ChangeDetector as _CD
+    from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
+                             Request, ServeEngine, ServeMetrics,
+                             ShortestJobFirst)
+
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("overhead_probe", _open_loop_builder,
+                          context_fn=lambda a, k: int(a[0].shape[0]))
+
+    class NoopExec:
+        def execute(self, batch):
+            pass
+
+    metrics = ServeMetrics()
+    batcher = ContinuousBatcher(8)
+    tuner = BucketTuner(batcher, rt, metric=metrics.interval_goodput,
+                        dwell=10000, wait_compiles=True,
+                        change_detector=lambda: _CD(float("inf")))
+    controller = Controller(handler, lambda: ExhaustiveSweep([{}]),
+                            dwell=10000, wait_compiles=True, prefetch=0)
+    engine = ServeEngine(handler, controller, batcher, ShortestJobFirst(),
+                         executor=NoopExec(), queue=AdmissionQueue(),
+                         tuner=tuner, metrics=metrics)
+    engine.submit(Request(max_new_tokens=steps))
+    ts = []
+    engine.step()                                  # warm the probe path
+    for _ in range(steps - 1):
+        t0 = time.perf_counter()
+        engine.step()
+        ts.append(time.perf_counter() - t0)
+    rt.shutdown()
+    return sorted(ts)[len(ts) // 2] if ts else 0.0
+
+
+def run_open_loop(max_batch: int = 64, d: int = 1536, seed: int = 7,
+                  phase_s: float = 1.5, ramp=(0.3, 0.6, 1.0),
+                  burst: float = 3.0, utilization: float = 0.4,
+                  slo_slack: float = 1.4,
+                  target_inflight: int = 6, budgets=(4, 8, 16),
+                  prompts=(16, 128, 512), queue_depth: int = 64,
+                  dwell: int = 6, bucket_dwell: int = 40,
+                  max_wall_s: float = 90.0) -> dict:
+    """Open-loop continuous-batching scenario (see module docstring).
+
+    Both runs replay the *same* pseudo-Poisson schedule; the only
+    difference is the bucketing: Controller-tuned scheme search vs the
+    fixed single bucket (every batch pads to ``max_batch``).
+    ``bucket_dwell`` must comfortably exceed a request lifetime in steps
+    (the largest token budget), or every scheme's goodput window is
+    dominated by the previous scheme's stragglers and the search ties at
+    zero.  Strictly
+    higher goodput for the tuned run is the acceptance bar, and the
+    mechanism is latency: at the calibrated load (``utilization`` of the
+    small-bucket capacity at ``target_inflight`` concurrent requests) a
+    tuned batcher runs ~``target_inflight``-row buckets, so each request's
+    per-token service time is the small-bucket step cost; the single
+    bucket pads every step to ``max_batch`` rows and its per-token service
+    time is the full-batch step cost.  Each request's deadline is set at
+    its token budget times the *geometric mean* of the two measured step
+    costs — comfortably met by the tuned run, comfortably missed by the
+    padded one, on any host speed, because both sides are measured on this
+    host.  The final schedule phase is a short burst far above capacity:
+    both engines shed it at the bounded queue (backpressure), which is
+    what the shed counters in the output exercise.
+    """
+    import random as _random
+
+    from repro.core.metrics import ChangeDetector as _CD
+    from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
+                             OpenLoopSource, Request, ServeEngine,
+                             ServeMetrics, ShortestJobFirst,
+                             pseudo_poisson_times)
+
+    small = max(1, 2 ** (target_inflight - 1).bit_length())  # bucket(inflight)
+    costs = _calibrate_step_cost(d, (small, max_batch))
+    overhead = _calibrate_engine_overhead()
+    c_small = costs[small] + overhead          # effective per-step costs
+    c_big = costs[max_batch] + overhead
+    budget_mean = sum(budgets) / len(budgets)
+    # Per-request deadline: budget x geometric mean of the two effective
+    # step costs (a request's per-token latency IS its batch's step time),
+    # times a slack factor absorbing host-speed drift between calibration
+    # and run.  Tuned margin ~= slack x sqrt(c_big/c_small); single-bucket
+    # shortfall ~= sqrt(c_big/c_small) / slack — both > 1 while
+    # 1 < slack < sqrt(c_big/c_small).
+    slo_per_token = slo_slack * (c_small * c_big) ** 0.5
+    # Peak arrival rate targeting `utilization` of the small-bucket
+    # capacity (the ramp approaches it from below, so in-flight stays near
+    # target_inflight and the tuned batcher actually runs small buckets).
+    rate0 = utilization * (target_inflight / c_small) / budget_mean
+    phases = [(phase_s, rate0 * m) for m in ramp]
+    # Terminal burst sized to overflow the bounded queue (~2x depth past
+    # what full-batch service absorbs): the backpressure/shed path under
+    # test, identical for both engines.
+    cap_req_s = (max_batch / c_big) / budget_mean
+    burst_rate = max(burst * cap_req_s, rate0)
+    burst_dur = min(0.5 * phase_s,
+                    2.0 * queue_depth / max(burst_rate - cap_req_s, 1e-9))
+    phases.append((burst_dur, burst_rate))
+
+    def schedule():
+        rng = _random.Random(seed)
+        out = []
+        for t in pseudo_poisson_times(phases, seed=seed):
+            budget = rng.choice(budgets)
+            out.append((t, Request(prompt_tokens=rng.choice(prompts),
+                                   max_new_tokens=budget,
+                                   deadline_s=budget * slo_per_token)))
+        return out
+
+    w = jnp.zeros((d, d), jnp.float32)
+
+    def run_once(tune_buckets: bool) -> dict:
+        # Async compile pipeline + wait_compiles=False: variant builds stay
+        # off the serving path (the paper's critical-path rule) — a
+        # synchronous compile inside the loop would stall every in-flight
+        # request past its deadline.
+        rt = IridescentRuntime(async_compile=True, max_compile_workers=2)
+        handler = rt.register("open_loop_step", _open_loop_builder,
+                              context_fn=lambda a, k: int(a[0].shape[0]))
+
+        class Exec:
+            def execute(self, batch):
+                x = jnp.zeros((batch.size, d), jnp.float32)
+                jax.block_until_ready(handler(x, w))
+
+        candidates = [{"fused": True}, {"fused": False}]
+        controller = Controller(
+            handler, lambda: ExhaustiveSweep(candidates), dwell=dwell,
+            change_detector=lambda: ChangeDetector(float("inf")),
+            wait_compiles=False, prefetch=0)
+        metrics = ServeMetrics()
+        if tune_buckets:
+            batcher = ContinuousBatcher(max_batch)
+            # The scenario under test is *settling* on a scheme; goodput on
+            # a shared CI host jitters past any sane change threshold, so
+            # re-exploration is disabled here (as in run_mixed).
+            tuner = BucketTuner(batcher, rt,
+                                metric=metrics.interval_goodput,
+                                dwell=bucket_dwell, wait_compiles=False,
+                                change_detector=lambda: _CD(float("inf")))
+        else:
+            batcher = ContinuousBatcher(max_batch, scheme="single")
+            tuner = None
+        engine = ServeEngine(
+            handler, controller, batcher, ShortestJobFirst(),
+            executor=Exec(),
+            queue=AdmissionQueue(depth=queue_depth, policy="shed-oldest"),
+            tuner=tuner, metrics=metrics)
+        source = OpenLoopSource(engine.queue, schedule())
+        t0 = time.perf_counter()
+        engine.run(source=source, duration_s=max_wall_s)
+        engine.drain(timeout_s=max_wall_s / 2)
+        wall = time.perf_counter() - t0
+        stats = engine.stats()
+        serve = stats["serve"]
+        row = {
+            "bucketing": "tuned" if tune_buckets else "single",
+            "wall_s": round(wall, 3),
+            "offered": stats["queue"]["submitted"],
+            "completed": serve["completed"],
+            "completed_tokens": serve["completed_tokens"],
+            "tok_per_s": round(serve["completed_tokens"] / wall, 2),
+            "goodput_tok_per_s": round(serve["goodput_tokens"] / wall, 2),
+            "slo_met": serve["slo_met"],
+            "slo_missed": serve["slo_missed"],
+            "shed": stats["queue"]["shed"] + serve["shed"],
+            "rejected": stats["queue"]["rejected"],
+            "shed_errors": stats["queue"]["shed_errors"],
+            "latency_p50_ms": serve["latency_p50_ms"],
+            "latency_p95_ms": serve["latency_p95_ms"],
+            "latency_p99_ms": serve["latency_p99_ms"],
+            "bucket_steps": {str(k): v
+                             for k, v in stats["bucket_steps"].items()},
+            "padded_rows": stats["padded_rows"],
+        }
+        if tuner is not None:
+            row["scheme"] = tuner.active_scheme()
+            row["boundaries"] = list(
+                batcher.schemes[tuner.active_scheme()])
+            row["scheme_settled"] = tuner.settled()
+        else:
+            row["scheme"] = "single"
+            row["boundaries"] = list(batcher.schemes["single"])
+        rt.shutdown()
+        return row
+
+    tuned = run_once(tune_buckets=True)
+    single = run_once(tune_buckets=False)
+    return {
+        "seed": seed,
+        "d": d,
+        "max_batch": max_batch,
+        "slo_per_token_ms": round(slo_per_token * 1e3, 4),
+        "calibration_ms": {**{str(b): round(c * 1e3, 3)
+                              for b, c in costs.items()},
+                           "engine_overhead": round(overhead * 1e3, 3)},
+        "arrival_phases": [[round(s, 3), round(r, 2)] for s, r in phases],
+        "tuned": tuned,
+        "single_bucket": single,
+        "tuned_gt_single": (tuned["goodput_tok_per_s"]
+                            > single["goodput_tok_per_s"]),
+    }
+
+
 def write_json(path: str, result: dict) -> None:
     with open(path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
@@ -210,9 +489,11 @@ def run() -> list[Row]:
     """benchmarks/run.py entry: CSV rows + BENCH_serve.json side artifact."""
     result = run_serve()
     result["mixed"] = run_mixed()
+    result["open_loop"] = run_open_loop()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
     mixed = result["mixed"]
+    ol = result["open_loop"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
             f"wall={result['wall_s']}s"),
@@ -228,7 +509,15 @@ def run() -> list[Row]:
         Row("serve/mixed_distinct_configs",
             float(mixed["distinct_configs"]),
             f"contexts={list(mixed['contexts'])}"),
+        Row("serve/open_loop_goodput", ol["tuned"]["goodput_tok_per_s"],
+            f"single={ol['single_bucket']['goodput_tok_per_s']} "
+            f"scheme={ol['tuned']['scheme']}"),
+        Row("serve/open_loop_p95_ms", ol["tuned"]["latency_p95_ms"],
+            f"single={ol['single_bucket']['latency_p95_ms']}"),
     ]
+
+
+_SCENARIOS = ("all", "serve", "mixed", "open_loop")
 
 
 def main() -> None:
@@ -241,13 +530,32 @@ def main() -> None:
     ap.add_argument("--compile-workers", type=int, default=2)
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--scenario", default="all", choices=_SCENARIOS,
+                    help="which section(s) to run; non-'all' runs merge "
+                         "into an existing --out file when present")
+    ap.add_argument("--open-loop-phase-s", type=float, default=1.5,
+                    help="seconds per rate-ramp phase of the open-loop "
+                         "scenario (3 phases)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
-    result = run_serve(steps=args.steps, arch=args.arch, batch=args.batch,
-                       max_len=args.max_len, dwell=args.dwell,
-                       compile_workers=args.compile_workers,
-                       prefetch=args.prefetch, cache_dir=args.cache_dir)
-    result["mixed"] = run_mixed()
+    result: dict = {}
+    if args.scenario != "all" and os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                result = json.load(f)
+        except ValueError:
+            result = {}
+    if args.scenario in ("all", "serve"):
+        result.update(run_serve(
+            steps=args.steps, arch=args.arch, batch=args.batch,
+            max_len=args.max_len, dwell=args.dwell,
+            compile_workers=args.compile_workers,
+            prefetch=args.prefetch, cache_dir=args.cache_dir))
+    if args.scenario in ("all", "mixed"):
+        result["mixed"] = run_mixed()
+    if args.scenario in ("all", "open_loop"):
+        result["open_loop"] = run_open_loop(
+            phase_s=args.open_loop_phase_s)
     write_json(args.out, result)
     print(json.dumps(result, indent=1, sort_keys=True))
 

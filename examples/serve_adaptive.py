@@ -1,11 +1,14 @@
-"""Serving example: batched LM decode with online specialization.
+"""Serving example: continuous-batching LM decode with online specialization.
 
     PYTHONPATH=src python examples/serve_adaptive.py
     PYTHONPATH=src python examples/serve_adaptive.py --arch rwkv6-1.6b
 
-The handler is the decode step of a reduced assigned architecture; the
-policy explores decode-side spec points (cache dtype; chunk length for the
-recurrent archs) against measured tokens/s.
+Open-loop requests (pseudo-Poisson arrivals, mixed decode budgets) flow
+through the :mod:`repro.serve` engine: admission queue -> scheduler ->
+continuous batcher -> the decode handler's per-bucket dispatch snapshots.
+The Controller tunes decode spec points (cache dtype; chunk length for the
+recurrent archs) per batch bucket, and the bucket boundaries themselves
+are tuned online against measured goodput.
 """
 import sys
 

@@ -74,13 +74,22 @@ def _decode_config(cfg: dict) -> dict:
 SPEC_STATE_VERSION = 2
 
 
-def save_spec_state(path: str, runtime: Any) -> None:
+def save_spec_state(path: str, runtime: Any,
+                    keep: "Any | None" = None) -> None:
     """Persist each handler's active configuration per context
-    (atomic write, versioned format)."""
+    (atomic write, versioned format).
+
+    ``keep(handler_name, encoded_context_key) -> bool`` filters what is
+    persisted — the serve engine passes the per-context *settled* predicate
+    so a context still mid-sweep never writes its candidate config as the
+    next restart's "winner", while every settled context's tuned config is
+    saved regardless.
+    """
     handlers = {}
     for name, ctx_cfgs in runtime.spec_state().items():
-        handlers[name] = {"contexts": {enc: _encode_config(cfg)
-                                       for enc, cfg in ctx_cfgs.items()}}
+        handlers[name] = {"contexts": {
+            enc: _encode_config(cfg) for enc, cfg in ctx_cfgs.items()
+            if keep is None or keep(name, enc)}}
     state = {"version": SPEC_STATE_VERSION, "handlers": handlers}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",

@@ -33,7 +33,8 @@ from repro.core.runtime import (ContextView, DEFAULT_CONTEXT, Handler,
                                 encode_context_key)
 from repro.core.policy import (ContextualBandit, CoordinateDescent,
                                EpsilonGreedy, ExhaustiveSweep, Explorer,
-                               Phase, Policy, ScoreBoard, SuccessiveHalving)
+                               Phase, Policy, ScoreBoard, SuccessiveHalving,
+                               ThompsonSampling)
 from repro.core.controller import Controller
 from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
                                 StepTimer, ThroughputCounter,
@@ -49,7 +50,8 @@ __all__ = [
     "Handler", "IridescentRuntime", "Variant", "encode_context_key",
     "ContextualBandit", "Controller", "CoordinateDescent", "EpsilonGreedy",
     "ExhaustiveSweep", "Explorer", "Phase", "Policy", "ScoreBoard",
-    "SuccessiveHalving", "AtomicCounter", "ChangeDetector", "EWMA",
+    "SuccessiveHalving", "ThompsonSampling",
+    "AtomicCounter", "ChangeDetector", "EWMA",
     "StepTimer", "ThroughputCounter", "ThroughputWindow", "fastpath",
     "guards", "instrumentation",
 ]

@@ -15,7 +15,18 @@ import time
 from typing import Deque
 
 __all__ = ["AtomicCounter", "ThroughputCounter", "ThroughputWindow", "EWMA",
-           "ChangeDetector", "StepTimer"]
+           "ChangeDetector", "StepTimer", "nearest_rank"]
+
+
+def nearest_rank(samples, p: float) -> float:
+    """Nearest-rank percentile ``p`` (0-100) of ``samples``; NaN when
+    empty.  The one convention shared by every latency report in this
+    repo (``StepTimer``, the serve metrics)."""
+    if not samples:
+        return math.nan
+    xs = sorted(samples)
+    idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+    return xs[idx]
 
 
 class AtomicCounter:
@@ -197,11 +208,7 @@ class StepTimer:
         return sum(self._samples) / len(self._samples) if self._samples else math.nan
 
     def percentile(self, p: float) -> float:
-        if not self._samples:
-            return math.nan
-        xs = sorted(self._samples)
-        idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
-        return xs[idx]
+        return nearest_rank(self._samples, p)
 
     def clear(self) -> None:
         self._samples.clear()

@@ -13,6 +13,9 @@ building blocks.  These are the building blocks:
 * :class:`ContextualBandit` — UCB1 over a fixed candidate set (joint
   impl+tile configs); the Controller instantiates one per specialization
   context, so each workload class keeps its own arm statistics.
+* :class:`ThompsonSampling` — posterior-sampling bandit (Gaussian or Beta
+  posterior per arm), deterministic under an explicit seed; same
+  per-context protocol as the UCB1 bandit.
 * :class:`Explorer` — the legacy single-context lifecycle driver (handles
   instrument → explore → exploit and workload-change re-exploration, paper
   Fig 7/9).  New code should drive
@@ -35,7 +38,7 @@ logger = logging.getLogger("repro.core.policy")
 
 __all__ = ["Policy", "ScoreBoard", "ExhaustiveSweep", "CoordinateDescent",
            "EpsilonGreedy", "SuccessiveHalving", "ContextualBandit",
-           "Explorer", "Phase"]
+           "ThompsonSampling", "Explorer", "Phase"]
 
 
 class Policy:
@@ -371,6 +374,137 @@ class ContextualBandit(Policy):
         self._observations += 1
         n = self._pulls[key]
         self._means[key] += (metric - self._means[key]) / n
+        self._board.observe(config, metric)
+
+    def arm_stats(self) -> list[dict]:
+        """Per-arm pulls / running means (telemetry)."""
+        return [{"config": dict(cfg), "pulls": self._pulls[k],
+                 "mean": self._means[k]}
+                for cfg, k in zip(self.candidates, self._keys)]
+
+    def best(self) -> tuple[dict | None, float]:
+        pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
+                  if self._pulls[k] > 0]
+        if not pulled:
+            return None, -math.inf
+        # max() keeps the earliest candidate among equal means.
+        cfg, key = max(pulled, key=lambda ck: self._means[ck[1]])
+        return dict(cfg), self._means[key]
+
+
+class ThompsonSampling(Policy):
+    """Thompson sampling over a fixed candidate set (ROADMAP: "wider policy
+    library beyond UCB1").
+
+    Each arm keeps a posterior over its metric; ``propose()`` samples every
+    posterior and plays the argmax — exploration falls out of posterior
+    uncertainty instead of an explicit bonus term.  Two posteriors:
+
+    * ``"gaussian"`` (default) — unknown-mean Normal: arm mean ``m_k`` with
+      sampling scale ``sqrt(var_hat / n_k)`` where ``var_hat`` pools the
+      observed spread across all arms (Welford); before any spread is
+      observed, ``prior_scale`` seeds the exploration width.  Works for
+      unnormalized metrics like tokens/s.
+    * ``"beta"`` — Beta(1 + successes, 1 + failures) for rewards in [0, 1]
+      (metrics are clipped); the classic Bernoulli-bandit posterior.
+
+    Deterministic given ``seed``: all draws come from one ``random.Random``,
+    so the same observation sequence replays the same proposals.  Same
+    protocol as :class:`ContextualBandit` (``propose``/``observe``/``peek``/
+    ``best``; ``rounds=0`` = auto, 4x arms; ties break to the earliest
+    candidate), so the :class:`~repro.core.controller.Controller` can run
+    one instance per specialization context via its policy-factory
+    protocol.
+    """
+
+    def __init__(self, candidates: Sequence[Config], seed: int = 0,
+                 rounds: int | None = 0, posterior: str = "gaussian",
+                 prior_scale: float = 1.0):
+        self.candidates = [dict(cfg) for cfg in candidates]
+        if not self.candidates:
+            raise ValueError("ThompsonSampling needs at least one candidate")
+        if posterior not in ("gaussian", "beta"):
+            raise ValueError(f"unknown posterior {posterior!r}; "
+                             f"expected 'gaussian' or 'beta'")
+        self.seed = seed
+        self.posterior = posterior
+        self.prior_scale = float(prior_scale)
+        #: rounds=0 (the default) means "auto": 4 pulls per arm.
+        self.rounds = (4 * len(self.candidates) if rounds == 0 else rounds)
+        self.reset()
+
+    def reset(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._keys = [config_key(cfg) for cfg in self.candidates]
+        self._pulls: dict[tuple, int] = {k: 0 for k in self._keys}
+        self._means: dict[tuple, float] = {k: 0.0 for k in self._keys}
+        self._m2: dict[tuple, float] = {k: 0.0 for k in self._keys}
+        self._succ: dict[tuple, float] = {k: 0.0 for k in self._keys}
+        self._observations = 0
+        self._proposed = 0
+        self._board = ScoreBoard()
+
+    def _unseen(self) -> list[dict]:
+        return [cfg for cfg, k in zip(self.candidates, self._keys)
+                if self._pulls[k] == 0]
+
+    def _pooled_std(self) -> float:
+        """Pooled within-arm standard deviation (Welford M2 across arms);
+        falls back to ``prior_scale`` until any arm has 2+ observations."""
+        m2 = sum(self._m2.values())
+        dof = sum(max(0, n - 1) for n in self._pulls.values())
+        if dof == 0 or m2 <= 0.0:
+            return self.prior_scale
+        return math.sqrt(m2 / dof)
+
+    def _sample(self, key: tuple) -> float:
+        n = self._pulls[key]
+        if self.posterior == "beta":
+            a = 1.0 + self._succ[key]
+            b = 1.0 + (n - self._succ[key])
+            return self._rng.betavariate(a, b)
+        scale = self._pooled_std() / math.sqrt(max(1, n))
+        return self._rng.gauss(self._means[key], scale)
+
+    def propose(self) -> dict | None:
+        if self.rounds is not None and self._proposed >= self.rounds:
+            return None
+        self._proposed += 1
+        unseen = self._unseen()
+        if unseen:
+            return dict(unseen[0])
+        # max() keeps the earliest candidate among equal draws.
+        best_key = max(self._keys, key=self._sample)
+        idx = self._keys.index(best_key)
+        return dict(self.candidates[idx])
+
+    def peek(self, n: int = 1) -> list[dict]:
+        # Only the initial pull-each-arm-once phase is deterministic without
+        # burning posterior draws (peeking must not consume RNG state).
+        remaining = (None if self.rounds is None
+                     else max(0, self.rounds - self._proposed))
+        upcoming = self._unseen()
+        if remaining is not None:
+            upcoming = upcoming[:remaining]
+        return [dict(cfg) for cfg in upcoming[:n]]
+
+    def observe(self, config: Config, metric: float) -> None:
+        key = config_key(config)
+        if key not in self._pulls:        # tolerate out-of-set observations
+            self._keys.append(key)
+            self.candidates.append(dict(config))
+            self._pulls[key] = 0
+            self._means[key] = 0.0
+            self._m2[key] = 0.0
+            self._succ[key] = 0.0
+        if self.posterior == "beta":
+            self._succ[key] += min(1.0, max(0.0, metric))
+        self._pulls[key] += 1
+        self._observations += 1
+        n = self._pulls[key]
+        delta = metric - self._means[key]
+        self._means[key] += delta / n
+        self._m2[key] += delta * (metric - self._means[key])
         self._board.observe(config, metric)
 
     def arm_stats(self) -> list[dict]:

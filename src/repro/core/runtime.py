@@ -184,7 +184,7 @@ class _Context:
 
     __slots__ = ("key", "variants", "active_key", "generic_key", "arg_specs",
                  "need_arg_specs", "epoch", "snapshot", "tput",
-                 "guard_misses", "window")
+                 "guard_misses", "window", "instr_rate")
 
     def __init__(self, key: Any, tput: ThroughputCounter):
         self.key = key
@@ -199,6 +199,8 @@ class _Context:
         self.guard_misses = AtomicCounter()
         #: per-context throughput observations (filled by the Controller)
         self.window = ThroughputWindow()
+        #: host-side sampling rate while this context is instrumented
+        self.instr_rate = 0.0
 
 
 class ContextView:
@@ -241,6 +243,17 @@ class ContextView:
 
     def active_config(self) -> dict:
         return self.handler.active_config(context=self.key)
+
+    def enable_instrumentation(self, rate: float = 1.0,
+                               collectors: Mapping[str, Callable] | None = None,
+                               wait: bool = True) -> None:
+        """Instrument *this* context only (closes the ROADMAP item: other
+        contexts keep their uninstrumented fast path)."""
+        self.handler.enable_instrumentation(rate=rate, collectors=collectors,
+                                            wait=wait, context=self.key)
+
+    def disable_instrumentation(self) -> None:
+        self.handler.disable_instrumentation(context=self.key)
 
     def has_variant(self, config: Config) -> bool:
         """Whether a variant for ``config`` is already built in this
@@ -478,8 +491,7 @@ class Handler:
     def _rebuild_snapshot_locked(self, ctx: _Context) -> None:
         variant = ctx.variants[ctx.active_key]
         generic = ctx.variants[ctx.generic_key]
-        instr_rate = self._instr_rate if ctx.key == DEFAULT_CONTEXT else 0.0
-        ctx.snapshot = _Snapshot(variant, generic, instr_rate,
+        ctx.snapshot = _Snapshot(variant, generic, ctx.instr_rate,
                                  ready=not ctx.need_arg_specs)
         if ctx.key == DEFAULT_CONTEXT:
             # Mirror for the contextless fast path (and legacy callers).
@@ -625,27 +637,35 @@ class Handler:
 
     def enable_instrumentation(self, rate: float = 1.0,
                                collectors: Mapping[str, Callable] | None = None,
-                               wait: bool = True) -> None:
-        """Switch to the instrumented variant of the current config
-        (default context).
+                               wait: bool = True, context: Any = None) -> None:
+        """Switch to the instrumented variant of the current config.
 
         ``rate`` is the sampling rate for *host-side* collectors
         (paper §6.4 / Fig 11).  ``collectors`` maps label ->
-        ``fn(args, kwargs) -> value`` recorded into ``spec_space().observed``.
+        ``fn(args, kwargs) -> value`` recorded into ``spec_space().observed``
+        (collectors are handler-wide; sampling is gated per context).
+        ``context`` selects the workload class to instrument — only that
+        context pays the instrumentation cost; every other context keeps
+        its lock-free fast path.  ``None`` targets the default context,
+        preserving the context-less API.
         """
-        self._instr_rate = float(rate)
         for label, fn in (collectors or {}).items():
             self.recorders.add_host(label, fn, rate)
-        ctx = self._default
+        ctx = self._ctx(context)
+        if ctx.key == DEFAULT_CONTEXT:
+            self._instr_rate = float(rate)       # legacy mirror
         with self._lock:
+            ctx.instr_rate = float(rate)
             cfg = dict(ctx.snapshot.variant.config)
             self._rebuild_snapshot_locked(ctx)   # sampling starts immediately
         self._install(ctx, cfg, wait=wait, activate=True, instrument=True)
 
-    def disable_instrumentation(self) -> None:
-        self._instr_rate = 0.0
-        ctx = self._default
+    def disable_instrumentation(self, context: Any = None) -> None:
+        ctx = self._ctx(context)
+        if ctx.key == DEFAULT_CONTEXT:
+            self._instr_rate = 0.0
         with self._lock:
+            ctx.instr_rate = 0.0
             active = ctx.snapshot.variant
             self._rebuild_snapshot_locked(ctx)
         if active.specialized.instrumented:

@@ -36,7 +36,7 @@ from repro.core.metrics import AtomicCounter
 
 logger = logging.getLogger("repro.core.variant_cache")
 
-__all__ = ["VariantCache", "spec_fingerprint"]
+__all__ = ["VariantCache", "spec_fingerprint", "backend_fingerprint"]
 
 _FORMAT_VERSION = 1
 _SUFFIX = ".var"
@@ -55,9 +55,17 @@ def spec_fingerprint(args: tuple, kwargs: dict) -> str:
     return f"{treedef}|{';'.join(_describe_leaf(x) for x in leaves)}"
 
 
-def backend_fingerprint() -> str:
+def backend_fingerprint(portable: bool = False) -> str:
+    """Backend component of the cache key.
+
+    ``portable=True`` drops the device *count* (keeping platform, device
+    kind, and jax version), so artifacts compiled on one host warm-start N
+    identical replicas — see :class:`VariantCache` for the safety
+    tradeoff.
+    """
     devs = jax.devices()
-    return (f"{jax.default_backend()}|{devs[0].device_kind}|{len(devs)}"
+    count = "*" if portable else str(len(devs))
+    return (f"{jax.default_backend()}|{devs[0].device_kind}|{count}"
             f"|jax-{jax.__version__}")
 
 
@@ -84,11 +92,24 @@ class VariantCache:
     over the cap, the least-recently-used entries (by file mtime — loads
     touch their entry, so mtime tracks last use, not last write) are
     evicted until the cache fits again.  ``None`` = unbounded.
+
+    ``portable=True`` drops the device **count** from the entry key
+    (platform, device kind, and jax version stay pinned), so a cache
+    populated on a single host warm-starts N identical replicas behind a
+    shared artifact store.  The safety tradeoff: an executable whose
+    compiled program *depends* on the device count (multi-device sharding,
+    collectives) may deserialize on a host where that count is wrong — the
+    load then fails (deleted + recompiled, the normal corrupt-entry path)
+    or, for programs XLA considers loadable, runs with the original
+    partitioning.  Only enable it for fleets of replicas with identical
+    per-host topology; the default stays pinned to the exact device count.
     """
 
-    def __init__(self, directory: str, max_bytes: int | None = None):
+    def __init__(self, directory: str, max_bytes: int | None = None,
+                 portable: bool = False):
         self.directory = str(directory)
         self.max_bytes = max_bytes
+        self.portable = bool(portable)
         os.makedirs(self.directory, exist_ok=True)
         self._lock = threading.Lock()
         self.stats = CacheStats()
@@ -101,7 +122,7 @@ class VariantCache:
         raw = repr((_FORMAT_VERSION, handler_name, config_key,
                     bool(instrumented), sorted(repr(i) for i in
                                                dict(jit_kwargs or {}).items()),
-                    arg_fingerprint, backend_fingerprint()))
+                    arg_fingerprint, backend_fingerprint(self.portable)))
         return hashlib.sha256(raw.encode()).hexdigest()
 
     def _path(self, key: str) -> str:
@@ -148,7 +169,7 @@ class VariantCache:
             from jax.experimental import serialize_executable
             payload = serialize_executable.serialize(compiled)
             entry = {"format": _FORMAT_VERSION,
-                     "backend": backend_fingerprint(),
+                     "backend": backend_fingerprint(self.portable),
                      "meta": dict(meta or {}),
                      "payload": payload}
             blob = pickle.dumps(entry)

@@ -1,45 +1,118 @@
-"""Serving driver: batched decode with online specialization + workload
-adaptation (the paper's TAS/FastClick scenario on an LM).
+"""Serving driver: continuous-batching LM decode with online specialization.
 
 Run:
     PYTHONPATH=src python -m repro.launch.serve --steps 300
 
-The server decodes token batches against a KV cache; the Iridescent
-``Controller`` explores decode spec points (cache dtype, chunk length for
-recurrent archs) guided by measured tokens/s and re-explores when the
-request distribution shifts.  There is no hand-rolled propose/observe loop
-here: the fixed code calls the handler, then ``controller.step()``.
+The driver is built on the :mod:`repro.serve` engine: requests arrive
+open-loop (deterministic pseudo-Poisson at ``--rate``), pass through a
+bounded admission queue with backpressure, are ordered by a pluggable
+scheduler (``--scheduler fcfs|sjf|deadline``), and are packed each
+iteration into bucketed batch shapes by the continuous batcher.  The
+padded bucket size is the handler's ``context_fn`` key, so every bucket
+dispatches through its own specialization context and the Iridescent
+``Controller`` tunes decode spec points (cache dtype, kernel impl, chunk
+length for recurrent archs) per bucket.  The bucket boundaries are
+themselves a spec point: a ``BucketTuner`` searches bucketing schemes
+online against measured goodput (in-SLO tokens/s).
 
-With ``--cache-dir`` the runtime persists every variant's AOT executable
-(and the tuned per-context configuration) across restarts: a warm restart
-loads its serialized executables instead of recompiling — ``compile_stats()``
-on the second run reports ``xla_compiles == 0`` for previously seen configs.
+Migration note: every pre-engine flag (``--arch --batch --max-len --steps
+--dwell --compile-workers --prefetch --budget --cache-dir``) is preserved;
+``--batch`` now caps the *largest* batch bucket and ``--steps`` caps engine
+iterations.  With ``--cache-dir`` the runtime persists AOT executables and
+the tuned per-context configurations (including the bucket scheme, which
+rides ``spec_state.json`` on the ``bucket_plan`` handler) — a drained and
+restarted server resumes every context's tuned config with zero
+recompiles.
+
+Continuous-batching caveat (multi-host serve story, see ROADMAP): the
+decode step's cache position is a shared ring index, so per-request KV
+isolation across join/retire is approximate — the driver is a load and
+specialization harness, not a correctness-of-sampling harness.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import random
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
-from repro.checkpoint import restore_spec_state, save_spec_state
-from repro.core import (ChangeDetector, Controller, DEFAULT_CONTEXT,
-                        ExhaustiveSweep, IridescentRuntime)
+from repro.checkpoint import restore_spec_state
+from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
+                        IridescentRuntime)
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
+from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
+                         OpenLoopSource, Request, ServeEngine, ServeMetrics,
+                         bucket_plan_builder, make_scheduler,
+                         pseudo_poisson_times)
 from repro.training import make_decode_builder
+
+
+class DecodeExecutor:
+    """Adapts packed batches to ``serve_step(params, cache, tokens, pos)``.
+
+    One KV/state cache per batch bucket (materialized lazily), so compute
+    scales with the padded bucket size instead of the batch cap; the
+    handler's ``context_fn`` sees the token batch dimension — exactly the
+    bucket — and routes to that bucket's dispatch snapshot.
+    """
+
+    def __init__(self, handler, params, cfg, max_len: int):
+        self.handler = handler
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.caches: dict[int, object] = {}
+        self._step = 0
+
+    def _cache(self, bucket: int):
+        if bucket not in self.caches:
+            self.caches[bucket] = model.init_cache(
+                self.cfg, bucket, self.max_len,
+                RunOptions(decode_cache_dtype="float32"))
+        return self.caches[bucket]
+
+    def execute(self, batch) -> None:
+        b = batch.size
+        toks = np.zeros((b,), np.int32)
+        for i, req in enumerate(batch.requests):
+            toks[i] = req.payload or 0
+        pos = jnp.int32(self._step % self.max_len)
+        logits, new_cache = self.handler(
+            self.params, self._cache(b), jnp.asarray(toks), pos)
+        self.caches[b] = new_cache            # donated arg: keep the fresh one
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, req in enumerate(batch.requests):
+            req.payload = int(nxt[i])
+        self._step += 1
+
+
+def synthetic_workload(n: int, rate: float, seed: int = 0,
+                       budgets=(4, 8, 16, 32),
+                       prompts=(16, 64, 128)) -> list[tuple[float, Request]]:
+    """Deterministic open-loop schedule: pseudo-Poisson arrivals at
+    ``rate`` req/s with mixed prompt/decode lengths."""
+    rng = random.Random(seed)
+    times = pseudo_poisson_times([(n / max(rate, 1e-9) * 4, rate)], seed=seed)
+    return [(t, Request(prompt_tokens=rng.choice(prompts),
+                        max_new_tokens=rng.choice(budgets)))
+            for t in times[:n]]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batch cap = largest batch-shape bucket")
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--steps", type=int, default=240,
+                    help="cap on engine iterations")
     ap.add_argument("--dwell", type=int, default=20)
     ap.add_argument("--compile-workers", type=int, default=2,
                     help="CompileService worker threads")
@@ -52,6 +125,21 @@ def main() -> None:
     ap.add_argument("--cache-dir", default=None,
                     help="persist AOT executables + tuned config here; a "
                          "warm restart then performs zero recompiles")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="open-loop workload size")
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="mean arrival rate (req/s) of the open-loop load")
+    ap.add_argument("--slo-ms", type=float, default=2000.0,
+                    help="per-request arrival-to-finish SLO")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="admission queue bound (backpressure)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=("reject", "shed-oldest"))
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=("fcfs", "sjf", "deadline"))
+    ap.add_argument("--bucket-dwell", type=int, default=25,
+                    help="engine steps per bucket-scheme candidate")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch).replace(compute_dtype="float32")
@@ -62,25 +150,29 @@ def main() -> None:
                            variant_cache=variant_cache)
     handler = rt.register(
         "serve_step", make_decode_builder(cfg, kernel_impl="xla"),
+        context_fn=lambda a, k: int(a[2].shape[0]),   # tokens batch = bucket
         donate_argnums=1)
+    batcher = ContinuousBatcher(args.batch)
+    plan_handler = rt.register(
+        "bucket_plan",
+        bucket_plan_builder(list(batcher.schemes), batcher.default_scheme))
+
+    # Restore *before* building the controllers: per-bucket configs are
+    # seeded onto the handler (the Controller warm-starts each context as
+    # its traffic materializes), and the bucket scheme lands on the plan
+    # handler's active config.
+    spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
+                       if args.cache_dir else None)
+    initial_scheme = None
+    if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
+        from repro.serve.batcher import BUCKET_POINT
+        initial_scheme = plan_handler.active_config().get(BUCKET_POINT)
+        print(f"restored spec state: bucket scheme={initial_scheme}, "
+              f"seeded contexts={list(handler._seeded)}")
 
     params = model.init_params(jax.random.PRNGKey(0), cfg)
-    cache = model.init_cache(cfg, args.batch, args.max_len,
-                             RunOptions(decode_cache_dtype="float32"))
-    tokens = jnp.zeros((args.batch,), jnp.int32)
+    executor = DecodeExecutor(handler, params, cfg, args.max_len)
 
-    spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
-                      if args.cache_dir else None)
-    initial_configs = None
-    if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
-        tuned = handler.active_config()
-        if tuned:
-            initial_configs = {DEFAULT_CONTEXT: tuned}
-            print(f"restored tuned config: {tuned}")
-
-    # decode spec points + the kernel-implementation choice (the registry
-    # candidates are host-filtered, so on CPU this sweeps xla_ref vs the
-    # interpreter and converges on xla_ref by measured tok/s).
     space = handler.spec_space()
     labels = ["cache_dtype", "rmsnorm_impl"] + (
         ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
@@ -88,30 +180,45 @@ def main() -> None:
         handler,
         lambda: ExhaustiveSweep.from_space(space, labels),
         dwell=args.dwell, change_detector=lambda: ChangeDetector(0.3),
-        wait_compiles=False, prefetch=args.prefetch, budget=args.budget,
-        initial_configs=initial_configs)
+        wait_compiles=False, prefetch=args.prefetch, budget=args.budget)
+
+    slo_s = args.slo_ms / 1e3
+    metrics = ServeMetrics(slo_s=slo_s)
+    tuner = BucketTuner(batcher, metric=metrics.interval_goodput,
+                        dwell=args.bucket_dwell, plan_handler=plan_handler,
+                        initial_scheme=initial_scheme)
+    engine = ServeEngine(
+        handler, controller, batcher, make_scheduler(args.scheduler),
+        executor=executor,
+        queue=AdmissionQueue(depth=args.queue_depth, policy=args.shed_policy),
+        tuner=tuner, metrics=metrics, slo_s=slo_s)
+
+    schedule = synthetic_workload(args.requests, args.rate, seed=args.seed)
+    source = OpenLoopSource(engine.queue, schedule)
 
     t0 = time.perf_counter()
-    done = 0
-    for step in range(args.steps):
-        pos = jnp.int32(step % args.max_len)
-        logits, cache = handler(params, cache, tokens, pos)
-        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-        controller.step()
-        done += args.batch
-        if (step + 1) % 40 == 0:
-            dt = time.perf_counter() - t0
-            print(f"step {step + 1:4d} tok/s={done / dt:,.0f} "
-                  f"config={handler.active_config()}")
-    print(f"served {done} tokens; variants: {len(handler.variants())}")
-    best, metric = controller.best()
-    print(f"best config: {best}")
+    engine.run(source=source, max_steps=args.steps)
+    engine.drain(timeout_s=60.0)
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    served = stats["serve"]
+    print(f"served {served['completed']} requests / "
+          f"{served['completed_tokens']} tokens in {wall:.2f}s "
+          f"(goodput basis: slo={args.slo_ms:.0f}ms, "
+          f"met={served['slo_met']} missed={served['slo_missed']})")
+    print(f"p50/p95/p99 latency ms: {served['latency_p50_ms']} / "
+          f"{served['latency_p95_ms']} / {served['latency_p99_ms']}")
+    print(f"bucket steps: {stats['bucket_steps']}  "
+          f"scheme: {tuner.active_scheme()} "
+          f"(boundaries {batcher.schemes[tuner.active_scheme()]})")
+    best_cfgs = {str(k): ({kk: repr(vv) for kk, vv in cfg.items()}
+                          if cfg is not None else None)
+                 for k, cfg in controller.best_configs().items()}
+    print(f"per-bucket configs: {json.dumps(best_cfgs)}")
     print(f"compile stats: {json.dumps(rt.compile_stats())}")
-    # Persist the tuned configs only if the controller has settled — a
-    # mid-sweep candidate must not become the next restart's "winner".
-    if spec_state_path and controller.settled():
-        save_spec_state(spec_state_path, rt)
-    rt.shutdown()
+    # shutdown drains (already drained), persists spec state once settled,
+    # and stops the compile workers.
+    engine.shutdown(state_dir=args.cache_dir)
 
 
 if __name__ == "__main__":

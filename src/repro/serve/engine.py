@@ -1,0 +1,300 @@
+"""The continuous-batching serve engine: the framework's production entry
+point.
+
+One :class:`ServeEngine` wires the serve subsystem together around the
+specialization runtime::
+
+    clients -> AdmissionQueue -> Scheduler -> ContinuousBatcher
+                   (backpressure)  (ordering)   (join/retire/pad)
+                                                      |
+                                    PackedBatch (bucket = context key)
+                                                      |
+                            Handler (per-context dispatch snapshot)
+                                                      |
+                       Controller / BucketTuner  <-  ServeMetrics
+                      (per-bucket spec search)    (latency, goodput)
+
+Each iteration (:meth:`step`): pump open-loop arrivals, pack the next batch
+(in-flight rows stay, scheduler-ordered joiners fill the gap, the batch
+pads to the current bucket scheme's boundary), execute it through the
+handler — the padded size is the handler's ``context_fn`` key, so every
+bucket dispatches through its own specialization context — then retire
+requests whose token budget is spent, feed their completions to the
+metrics, and advance the per-bucket :class:`Controller` and the
+:class:`BucketTuner`.
+
+``drain()`` serves out everything in flight (graceful shutdown);
+``shutdown()`` drains, persists the tuned per-context configurations
+(``spec_state.json`` — including the tuned bucket scheme, which lives on
+the ``bucket_plan`` handler) and releases the compile pipeline.  With a
+persistent variant cache, a restarted engine resumes every context's tuned
+config with zero recompiles.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import time
+from typing import Any, Callable, Protocol
+
+from repro.serve.batcher import BucketTuner, ContinuousBatcher, PackedBatch
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import AdmissionQueue, OpenLoopSource
+from repro.serve.request import Completion, Request
+from repro.serve.scheduler import FCFS, Scheduler
+
+logger = logging.getLogger("repro.serve.engine")
+
+__all__ = ["ServeEngine", "BatchExecutor"]
+
+
+class BatchExecutor(Protocol):
+    """Model-side adapter: run one decode step for a packed batch.
+
+    ``execute(batch)`` must produce one token for every request in
+    ``batch.requests`` (the engine credits ``generated`` itself).  The
+    optional ``retire(request)`` hook is called when a request leaves the
+    batch (free its slot/cache state).
+    """
+
+    def execute(self, batch: PackedBatch) -> None: ...
+
+
+class ServeEngine:
+    """Continuous-batching serve loop over a specialization handler.
+
+    ``handler`` is the model's registered trampoline (its ``context_fn``
+    should key on the padded batch size so buckets map to specialization
+    contexts); ``controller`` its per-context spec search (optional);
+    ``batcher``/``scheduler``/``queue`` default to a pow2-bucket batcher
+    with FCFS over an unbounded queue.  ``executor`` adapts packed batches
+    to actual handler calls.  ``tuner`` (a :class:`BucketTuner`) makes the
+    bucket boundaries themselves a tuned spec point.
+    """
+
+    def __init__(
+        self,
+        handler,                             # repro.core.runtime.Handler
+        controller=None,                     # repro.core.controller.Controller
+        batcher: ContinuousBatcher | None = None,
+        scheduler: Scheduler | None = None,
+        *,
+        executor: BatchExecutor | Callable[[PackedBatch], None] | None = None,
+        queue: AdmissionQueue | None = None,
+        tuner: BucketTuner | None = None,
+        metrics: ServeMetrics | None = None,
+        slo_s: float | None = None,
+        max_batch: int = 8,
+        clock: Callable[[], float] = time.perf_counter,
+        on_completion: Callable[[Completion], None] | None = None,
+    ):
+        if executor is None:
+            raise ValueError("ServeEngine needs an executor (the adapter "
+                             "that turns a PackedBatch into handler calls)")
+        self.handler = handler
+        self.controller = controller
+        self.batcher = batcher if batcher is not None \
+            else ContinuousBatcher(max_batch)
+        self.scheduler = scheduler if scheduler is not None else FCFS()
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.tuner = tuner
+        self.slo_s = slo_s
+        self.clock = clock
+        self.metrics = metrics if metrics is not None \
+            else ServeMetrics(slo_s=slo_s, clock=clock)
+        if callable(executor) and not hasattr(executor, "execute"):
+            executor = _FnExecutor(executor)
+        self.executor = executor
+        self.on_completion = on_completion
+        #: requests currently in the running batch, in slot order
+        self.active: list[Request] = []
+        self.steps = 0
+        self.idle_ticks = 0
+        self.tokens_generated = 0
+        self.padded_rows = 0            # wasted rows (padding) across steps
+        self.bucket_steps: dict[int, int] = {}
+        self._draining = False
+
+    # -- client side -----------------------------------------------------------
+    def submit(self, request: Request) -> bool:
+        """Offer one request to the admission queue."""
+        return self.queue.submit(request)
+
+    # -- one iteration ----------------------------------------------------------
+    def step(self, source: OpenLoopSource | None = None) -> int:
+        """One engine iteration; returns tokens produced (0 = idle tick).
+
+        An idle tick (nothing waiting, nothing in flight) does no handler
+        call and does not advance the controllers — dwell windows measure
+        service, not silence.
+        """
+        now = self.clock()
+        if source is not None:
+            source.pump(now)
+        batch = self.batcher.pack(self.active, self.queue, self.scheduler,
+                                  now, slo_s=self.slo_s)
+        if not batch.requests:
+            self.idle_ticks += 1
+            return 0
+        self.active = list(batch.requests)
+        self.executor.execute(batch)
+        t_after = self.clock()
+        tokens = 0
+        finished: list[Request] = []
+        for req in batch.requests:
+            if req.first_token_t is None:
+                req.first_token_t = t_after
+            req.generated += 1
+            tokens += 1
+            if req.done:
+                finished.append(req)
+        for req in finished:
+            self._retire(req, t_after)
+        self.steps += 1
+        self.tokens_generated += tokens
+        self.padded_rows += batch.pad
+        self.bucket_steps[batch.size] = \
+            self.bucket_steps.get(batch.size, 0) + 1
+        if self.controller is not None:
+            self.controller.step()
+        if self.tuner is not None:
+            self.tuner.step()
+        return tokens
+
+    def _retire(self, req: Request, now: float) -> None:
+        self.active.remove(req)
+        req.finish_t = now
+        retire = getattr(self.executor, "retire", None)
+        if retire is not None:
+            retire(req)
+        completion = Completion.from_request(req, default_slo_s=self.slo_s)
+        self.metrics.observe(completion)
+        if self.on_completion is not None:
+            self.on_completion(completion)
+
+    # -- loops ------------------------------------------------------------------
+    def run(self, *, source: OpenLoopSource | None = None,
+            duration_s: float | None = None, max_steps: int | None = None,
+            idle_sleep_s: float = 5e-4) -> dict:
+        """Serve until the workload is done or a budget runs out.
+
+        Stops when ``duration_s``/``max_steps`` is reached, or — with a
+        ``source`` — when the schedule is exhausted and everything admitted
+        has been served.  Without any bound it serves until the queue and
+        the running batch are both empty.
+        """
+        t0 = self.clock()
+        while True:
+            if duration_s is not None and self.clock() - t0 >= duration_s:
+                break
+            if max_steps is not None and self.steps >= max_steps:
+                break
+            produced = self.step(source=source)
+            if produced == 0:
+                if (source is None or source.exhausted) and \
+                        not self.active and not len(self.queue):
+                    break
+                if idle_sleep_s:
+                    wait = idle_sleep_s
+                    if source is not None:
+                        due = source.next_due(self.clock())
+                        if due is not None:
+                            wait = min(max(due, 0.0), 0.01)
+                    time.sleep(wait)
+        return {"wall_s": self.clock() - t0, "steps": self.steps}
+
+    def drain(self, timeout_s: float | None = None,
+              shed_on_timeout: bool = True) -> bool:
+        """Serve out everything queued and in flight (graceful shutdown).
+
+        Admission closes; returns True when fully drained.  On timeout the
+        remainder is shed (counted, callbacks fired) rather than abandoned
+        mid-state, so the caller can still checkpoint and exit cleanly.
+        """
+        self._draining = True
+        self.queue.close()
+        t0 = self.clock()
+        while self.active or len(self.queue):
+            if timeout_s is not None and self.clock() - t0 >= timeout_s:
+                if shed_on_timeout:
+                    flushed = self.queue.flush()   # counted in queue stats
+                    retire = getattr(self.executor, "retire", None)
+                    for req in self.active:
+                        req.shed = True
+                        if retire is not None:
+                            retire(req)            # free slot/cache state
+                    # metrics count only the in-flight sheds; the flushed
+                    # waiters are already in queue.stats()["shed"].
+                    self.metrics.observe_shed(len(self.active))
+                    logger.warning("drain timed out; shed %d requests",
+                                   len(flushed) + len(self.active))
+                    self.active.clear()
+                return False
+            self.step()
+        return True
+
+    def shutdown(self, state_dir: str | None = None,
+                 drain_timeout_s: float | None = 30.0) -> None:
+        """Drain, checkpoint specialization state, stop compile workers.
+
+        With ``state_dir``, the tuned per-context configurations (model
+        handler *and* bucket-plan handler) are persisted to
+        ``<state_dir>/spec_state.json``.  Persistence is **per context**:
+        a context whose search has settled saves its tuned config; a
+        context still mid-sweep (e.g. a workload class that only appeared
+        during drain) is left out, so a candidate config never becomes
+        the next restart's "winner" — without holding every settled
+        context's result hostage to one straggler.
+        """
+        self.drain(timeout_s=drain_timeout_s)
+        runtime = self.handler.runtime
+        if state_dir is not None:
+            from repro.checkpoint import save_spec_state
+            save_spec_state(os.path.join(state_dir, "spec_state.json"),
+                            runtime, keep=self._spec_state_filter())
+        runtime.shutdown()
+
+    def _spec_state_filter(self):
+        """``keep(handler, encoded_key)`` predicate: drop contexts whose
+        controller is still exploring; everything else persists."""
+        from repro.core.runtime import encode_context_key
+        unsettled: dict[str, set] = {}
+        pairs = [(self.handler.name, self.controller)]
+        if self.tuner is not None:
+            pairs.append((self.tuner.handler.name, self.tuner.controller))
+        for name, ctl in pairs:
+            if ctl is None:
+                continue
+            drop = {encode_context_key(k) for k in ctl.contexts()
+                    if not ctl.settled(context=k)}
+            if drop:
+                unsettled[name] = drop
+        if not unsettled:
+            return None
+        return lambda name, enc: enc not in unsettled.get(name, ())
+
+    # -- telemetry ---------------------------------------------------------------
+    def stats(self) -> dict:
+        out = {
+            "steps": self.steps,
+            "idle_ticks": self.idle_ticks,
+            "tokens_generated": self.tokens_generated,
+            "padded_rows": self.padded_rows,
+            "in_flight": len(self.active),
+            "bucket_steps": dict(sorted(self.bucket_steps.items())),
+            "queue": self.queue.stats(),
+            "serve": self.metrics.summary(),
+        }
+        if self.tuner is not None:
+            out["buckets"] = self.tuner.status()
+        return out
+
+
+class _FnExecutor:
+    """Adapter for plain-callable executors."""
+
+    def __init__(self, fn: Callable[[PackedBatch], None]):
+        self._fn = fn
+
+    def execute(self, batch: PackedBatch) -> None:
+        self._fn(batch)

@@ -1,0 +1,109 @@
+"""Latency and goodput accounting for the serve engine.
+
+One :class:`ServeMetrics` per engine absorbs every :class:`Completion` and
+keeps the numbers the benchmarks and the bucket tuner consume, in the same
+shape as :mod:`repro.core.metrics` (percentile math mirrors ``StepTimer``;
+rates come from ``ThroughputCounter``, so ``interval_goodput()`` is the
+read-and-reset window metric a :class:`~repro.core.controller.Controller`
+can use directly):
+
+* **latency percentiles** — p50/p95/p99 of arrival-to-finish latency over
+  a bounded sample window,
+* **goodput** — completed tokens *within SLO* per second (the paper-adjacent
+  metric: a token that arrives after its deadline is not service),
+* **throughput** — all completed tokens per second, SLO or not.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque
+
+from repro.core.metrics import ThroughputCounter, nearest_rank
+from repro.serve.request import Completion
+
+__all__ = ["ServeMetrics"]
+
+
+class ServeMetrics:
+    """Completion accounting: percentiles, counters, goodput windows."""
+
+    def __init__(self, slo_s: float | None = None, window: int = 2048,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.slo_s = slo_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._latencies: Deque[float] = deque(maxlen=window)
+        self._queue_delays: Deque[float] = deque(maxlen=window)
+        self.completed = 0
+        self.completed_tokens = 0
+        self.goodput_tokens = 0      # lifetime tokens of in-SLO completions
+        self.slo_met = 0
+        self.slo_missed = 0
+        self.shed = 0
+        #: rate counters (reset-and-read windows, like the runtime's tput)
+        self.goodput = ThroughputCounter(clock)     # in-SLO tokens/s
+        self.throughput = ThroughputCounter(clock)  # all completed tokens/s
+
+    # -- feeding ---------------------------------------------------------------
+    def observe(self, completion: Completion) -> None:
+        with self._lock:
+            self._latencies.append(completion.latency_s)
+            qd = completion.queue_delay_s
+            if qd is not None:
+                self._queue_delays.append(qd)
+            self.completed += 1
+            self.completed_tokens += completion.tokens
+            if completion.within_slo:
+                self.slo_met += 1
+                self.goodput_tokens += completion.tokens
+            else:
+                self.slo_missed += 1
+        self.throughput.add(completion.tokens)
+        if completion.within_slo:
+            self.goodput.add(completion.tokens)
+
+    def observe_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.shed += n
+
+    # -- reading ---------------------------------------------------------------
+    def percentile(self, p: float) -> float:
+        """Latency percentile in seconds over the sample window (NaN when
+        empty) — the shared nearest-rank convention
+        (:func:`repro.core.metrics.nearest_rank`)."""
+        with self._lock:
+            xs = list(self._latencies)
+        return nearest_rank(xs, p)
+
+    def interval_goodput(self) -> float:
+        """In-SLO tokens/s since the previous call (read-and-reset): the
+        per-dwell window metric the bucket tuner's Controller observes."""
+        rate = self.goodput.read()
+        self.goodput.reset()
+        return rate
+
+    def summary(self) -> dict:
+        with self._lock:
+            n = len(self._latencies)
+            completed = self.completed
+            tokens = self.completed_tokens
+            good = self.goodput_tokens
+            met, missed, shed = self.slo_met, self.slo_missed, self.shed
+        return {
+            "completed": completed,
+            "completed_tokens": tokens,
+            "goodput_tokens": good,
+            "slo_met": met,
+            "slo_missed": missed,
+            "shed": shed,
+            "slo_s": self.slo_s,
+            "latency_window": n,
+            "latency_p50_ms": round(self.percentile(50) * 1e3, 3)
+            if n else None,
+            "latency_p95_ms": round(self.percentile(95) * 1e3, 3)
+            if n else None,
+            "latency_p99_ms": round(self.percentile(99) * 1e3, 3)
+            if n else None,
+        }

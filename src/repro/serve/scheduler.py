@@ -1,0 +1,82 @@
+"""Pluggable scheduling policies: which waiting requests join the batch.
+
+A scheduler is an ordering over the admission queue — ``key(now, slo_s)``
+returns the sort key :meth:`AdmissionQueue.take` uses to pick the next
+joiners.  Three classic policies ship:
+
+* :class:`FCFS`             — arrival order (the fairness baseline),
+* :class:`ShortestJobFirst` — fewest remaining decode tokens first
+  (minimizes mean latency; can starve long jobs under overload),
+* :class:`DeadlineAware`    — earliest absolute deadline first (EDF:
+  the SLO-aware policy; requests without a deadline sort last).
+
+All keys tie-break by arrival time then request id, so the order is total
+and deterministic.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.serve.request import Request
+
+__all__ = ["Scheduler", "FCFS", "ShortestJobFirst", "DeadlineAware",
+           "make_scheduler", "SCHEDULERS"]
+
+
+class Scheduler:
+    """Ordering policy protocol; subclasses implement :meth:`key`."""
+
+    name = "base"
+
+    def key(self, now: float,
+            slo_s: float | None = None) -> Callable[[Request], tuple]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+class FCFS(Scheduler):
+    name = "fcfs"
+
+    def key(self, now, slo_s=None):
+        return lambda r: (r.arrival_t if r.arrival_t is not None else now,
+                          r.rid)
+
+
+class ShortestJobFirst(Scheduler):
+    """Fewest remaining decode tokens first (prompt length breaks ties:
+    cheaper prefill goes first)."""
+
+    name = "sjf"
+
+    def key(self, now, slo_s=None):
+        return lambda r: (r.remaining, r.prompt_tokens,
+                          r.arrival_t if r.arrival_t is not None else now,
+                          r.rid)
+
+
+class DeadlineAware(Scheduler):
+    """Earliest-deadline-first over each request's absolute deadline
+    (its own ``deadline_s``, else the engine-wide SLO)."""
+
+    name = "deadline"
+
+    def key(self, now, slo_s=None):
+        return lambda r: (r.deadline_t(slo_s),
+                          r.arrival_t if r.arrival_t is not None else now,
+                          r.rid)
+
+
+SCHEDULERS: dict[str, type[Scheduler]] = {
+    cls.name: cls for cls in (FCFS, ShortestJobFirst, DeadlineAware)
+}
+
+
+def make_scheduler(name: str) -> Scheduler:
+    """Instantiate a scheduler by CLI name (``fcfs``/``sjf``/``deadline``)."""
+    try:
+        return SCHEDULERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; expected one of "
+                         f"{sorted(SCHEDULERS)}") from None

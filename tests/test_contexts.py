@@ -326,3 +326,59 @@ def test_property_context_routing_stays_correct():
         np.testing.assert_allclose(h(x, jnp.eye(n)), np.asarray(x),
                                    rtol=1e-6)
     rt.shutdown()
+
+
+# -- per-context instrumentation (ROADMAP: enable_instrumentation used to
+# -- target the default context only) ------------------------------------------
+
+def test_enable_instrumentation_per_context():
+    """Instrumenting one workload class samples only that class's calls;
+    every other context keeps its uninstrumented lock-free fast path."""
+    rt = make_rt()
+    h = rt.register("m", _mm_builder, context_fn=_batch_ctx)
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    h(jnp.ones((8, 8)), jnp.eye(8))
+    h.context(4).enable_instrumentation(
+        rate=1.0, collectors={"rows": lambda a, k: int(a[0].shape[0])})
+    for _ in range(3):
+        h(jnp.ones((4, 4)), jnp.eye(4))
+        h(jnp.ones((8, 8)), jnp.eye(8))
+    observed = h.spec_space().observed["rows"]
+    # only context 4's calls were sampled
+    assert observed["samples"] == 3
+    assert dict(observed["top"]) == {4: 3}
+    # context 4 is on the instrumented slow path, context 8 untouched
+    assert h._ctx_map[4].snapshot.variant.specialized.instrumented
+    assert h._ctx_map[8].snapshot.fast is not None
+    assert not h._ctx_map[8].snapshot.variant.specialized.instrumented
+    rt.shutdown()
+
+
+def test_disable_instrumentation_per_context_restores_fast_path():
+    rt = make_rt()
+    h = rt.register("m", _mm_builder, context_fn=_batch_ctx)
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    view = h.context(4)
+    view.enable_instrumentation(rate=1.0)
+    assert h._ctx_map[4].snapshot.fast is None        # sampling forces slow
+    view.disable_instrumentation()
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    snap = h._ctx_map[4].snapshot
+    assert not snap.variant.specialized.instrumented
+    assert snap.fast is not None                      # fast path restored
+    rt.shutdown()
+
+
+def test_contextless_instrumentation_unchanged():
+    """The legacy context-less call still targets the default context."""
+    rt = make_rt()
+    h = rt.register("m", _mm_builder)
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    h.enable_instrumentation(rate=1.0,
+                             collectors={"n": lambda a, k: a[0].shape[0]})
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    assert h.spec_space().observed["n"]["samples"] == 1
+    assert h._snapshot.variant.specialized.instrumented
+    h.disable_instrumentation()
+    assert not h._snapshot.variant.specialized.instrumented
+    rt.shutdown()

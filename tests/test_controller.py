@@ -344,3 +344,32 @@ def test_bandit_with_controller_per_context_arm_sets():
     assert h.active_config(context=4) == {"B": 4}
     assert h.active_config(context=8) == {"B": 8}
     rt.shutdown()
+
+
+def test_controller_accepts_thompson_sampling_per_context():
+    """ROADMAP satellite: the Controller runs a ThompsonSampling policy —
+    one independent posterior per specialization context."""
+    from repro.core import ThompsonSampling
+    rt = make_rt()
+    h = rt.register("m", _mm_builder, context_fn=_batch_ctx)
+    h(jnp.ones((4, 4)), jnp.eye(4))
+    h(jnp.ones((8, 8)), jnp.eye(8))
+    scores = {4: {4: 3.0, 8: 1.0}, 8: {4: 1.0, 8: 3.0}}
+
+    def metric(view):
+        return scores[view.key][view.active_config().get("B")]
+
+    ctl = Controller(
+        h, ThompsonSampling([{"B": 4}, {"B": 8}], seed=5, rounds=8),
+        metric=metric, dwell=2, wait_compiles=True,
+        change_detector=lambda: ChangeDetector(float("inf")))
+    _drive(h, ctl, [4, 8], 40)
+    assert ctl.settled()
+    assert ctl.best(context=4)[0] == {"B": 4}
+    assert ctl.best(context=8)[0] == {"B": 8}
+    # the per-context policies are independent instances with own state
+    ctls = ctl._ctls
+    assert ctls[4].policy is not ctls[8].policy
+    assert h.active_config(context=4) == {"B": 4}
+    assert h.active_config(context=8) == {"B": 8}
+    rt.shutdown()

@@ -286,3 +286,81 @@ def test_aot_demotes_after_consecutive_failures():
         np.testing.assert_allclose(out, np.ones((4, 4)))
     assert v.compiled is None                   # demoted after the streak
     rt.shutdown()
+
+
+# -- portable (replica-fleet) cache keys ---------------------------------------
+
+def _fake_devices(n, kind="FakeCPU"):
+    class _Dev:
+        device_kind = kind
+
+    return [_Dev() for _ in range(n)]
+
+
+def test_default_cache_key_stays_pinned_to_device_count(tmp_path, monkeypatch):
+    """The default key must change when the device count changes (a
+    single-host artifact must not be served to a different topology)."""
+    import jax as _jax
+    from repro.core.variant_cache import VariantCache
+
+    cache = VariantCache(str(tmp_path))
+    assert cache.portable is False
+    monkeypatch.setattr(_jax, "devices", lambda: _fake_devices(1))
+    k1 = cache.entry_key("h", ("cfg",), False, {}, "args")
+    monkeypatch.setattr(_jax, "devices", lambda: _fake_devices(4))
+    k4 = cache.entry_key("h", ("cfg",), False, {}, "args")
+    assert k1 != k4
+
+
+def test_portable_cache_key_ignores_device_count_only(tmp_path, monkeypatch):
+    """portable=True drops the device count but keeps the device kind, so
+    single-host artifacts warm-start N identical replicas — and nothing
+    else loosens."""
+    import jax as _jax
+    from repro.core.variant_cache import VariantCache
+
+    cache = VariantCache(str(tmp_path), portable=True)
+    monkeypatch.setattr(_jax, "devices", lambda: _fake_devices(1))
+    k1 = cache.entry_key("h", ("cfg",), False, {}, "args")
+    monkeypatch.setattr(_jax, "devices", lambda: _fake_devices(4))
+    k4 = cache.entry_key("h", ("cfg",), False, {}, "args")
+    assert k1 == k4                      # count no longer in the key
+    monkeypatch.setattr(_jax, "devices",
+                        lambda: _fake_devices(4, kind="OtherKind"))
+    k_other = cache.entry_key("h", ("cfg",), False, {}, "args")
+    assert k_other != k4                 # device *kind* stays pinned
+
+
+def test_portable_and_pinned_caches_use_distinct_keys(tmp_path):
+    """Flipping portability re-keys the cache (no accidental sharing
+    between pinned and portable artifact stores in one directory)."""
+    from repro.core.variant_cache import VariantCache
+
+    pinned = VariantCache(str(tmp_path))
+    portable = VariantCache(str(tmp_path), portable=True)
+    args = ("h", ("cfg",), False, {}, "args")
+    assert pinned.entry_key(*args) != portable.entry_key(*args)
+
+
+def test_portable_cache_round_trip(tmp_path):
+    """A portable cache still stores/loads AOT executables correctly."""
+    from repro.core.variant_cache import VariantCache
+
+    cache_dir = str(tmp_path / "portable")
+    def run(cfg):
+        rt = IridescentRuntime(
+            async_compile=False,
+            variant_cache=VariantCache(cache_dir, portable=True))
+        h = rt.register("m", _mm_builder)
+        h(jnp.ones((8, 8)), jnp.eye(8))
+        h.specialize(cfg, wait=True)
+        out = h(jnp.ones((8, 8)), jnp.eye(8))
+        stats = rt.compile_stats()
+        rt.shutdown()
+        return np.asarray(out), stats
+
+    o1, cold = run({"B": 4})
+    o2, warm = run({"B": 4})
+    assert warm["xla_compiles"] == 0
+    assert warm["cache_hits"] >= 2
+    np.testing.assert_allclose(o1, o2)
