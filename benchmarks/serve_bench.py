@@ -29,7 +29,16 @@ tracked by:
                              the tuner settles on.  The SLO and arrival
                              rate are calibrated from measured step costs,
                              so the comparison is meaningful on hosts of
-                             very different speeds.
+                             very different speeds,
+* ``disagg``               — prefill/decode disaggregation over the paged
+                             per-request KV runtime: the same prompt-heavy
+                             schedule served twice through the phased
+                             executor — once with ``(phase, bucket)``
+                             contexts + paged KV, once phase-blind with
+                             contiguous per-request slabs — recording the
+                             per-phase settled configs (they differ: the
+                             acceptance criterion), goodput vs the
+                             baseline, TTFT, and page-pool stats.
 
 CLI:
     PYTHONPATH=src:. python -m benchmarks.serve_bench \
@@ -479,6 +488,383 @@ def run_open_loop(max_batch: int = 64, d: int = 1536, seed: int = 7,
     }
 
 
+def _disagg_builder(d: int, vocab: int, rounds: int = 2):
+    """Serve-contract handler (``(params, cache, tokens, pos, n_new) ->
+    (logits, new_cache)``) whose best specialization depends on the
+    *phase*: a ``tile`` spec point sets the sequence block the step is
+    padded to and processed in.
+
+    Each tile-block pays a fixed setup cost (a serial ``w_run = tanh(w_run
+    @ w)`` chain — the data dependency defeats both CSE and inter-op
+    parallelism) plus compute proportional to the padded block.  A decode
+    step (S=1) with ``tile=64`` burns 64x the block FLOPs it needs; a
+    64-token prefill chunk with ``tile=8`` pays the per-block setup 8
+    times over.  So the prefill context wants ``tile=64``, the decode
+    context wants ``tile=8``, and a phase-blind context must compromise —
+    the cost asymmetry the disagg scenario measures.
+    """
+
+    def build(spec):
+        tile = spec.enum("tile", 8, (8, 64), guarded=False)
+
+        def f(params, cache, tokens, pos, n_new):
+            toks = tokens if tokens.ndim == 2 else tokens[:, None]
+            b, s = toks.shape
+            n_blocks = -(-s // tile)
+            x = jnp.pad(toks, ((0, 0), (0, n_blocks * tile - s)))
+            x = x.astype(jnp.float32)[:, :, None] * jnp.ones(
+                (d,), jnp.float32)                       # (B, S_pad, d)
+            w = params
+            w_run = w
+            ys = []
+            for i in range(n_blocks):
+                w_run = jnp.tanh(w_run @ w)              # serial setup
+                y = x[:, i * tile:(i + 1) * tile, :]
+                for _ in range(rounds):
+                    y = jnp.tanh(y @ w_run)              # block compute
+                ys.append(y)
+            y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
+            return y[:, -1, :vocab], cache
+
+        return f
+
+    return build
+
+
+def _calibrate_disagg(handler, w, cache, bucket: int, chunk: int,
+                      tiles=(8, 64), reps: int = 5) -> dict:
+    """Median seconds per (phase, tile) serve step on this host."""
+    from repro.training import phase_context_fn
+
+    out = {}
+    for phase in ("prefill", "decode"):
+        if phase == "prefill":
+            tokens = jnp.zeros((bucket, chunk), jnp.int32)
+            n_new = jnp.full((bucket,), chunk, jnp.int32)
+        else:
+            tokens = jnp.zeros((bucket,), jnp.int32)
+            n_new = jnp.ones((bucket,), jnp.int32)
+        pos = jnp.zeros((bucket,), jnp.int32)
+        key = phase_context_fn((w, cache, tokens, pos, n_new), {})
+        for tile in tiles:
+            handler.specialize({"tile": tile}, context=key, wait=True)
+            jax.block_until_ready(handler(w, cache, tokens, pos, n_new)[0])
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(
+                    handler(w, cache, tokens, pos, n_new)[0])
+                ts.append(time.perf_counter() - t0)
+            out[(phase, tile)] = sorted(ts)[len(ts) // 2]
+    return out
+
+
+def _calibrate_kv_cycle(template, axes, max_len: int, bucket: int,
+                        chunk: int, page_size: int,
+                        reps: int = 5) -> dict:
+    """Median seconds per materialize+harvest cycle per phase — the
+    engine-side per-step cost the handler calibration cannot see."""
+    from repro.serve import PagedKV
+
+    out = {}
+    for phase, n in (("prefill", chunk), ("decode", 1)):
+        kv = PagedKV(template, axes, max_len=max_len,
+                     capacity_tokens=2 * bucket * max_len,
+                     page_size=page_size)
+        rids = [f"calib-{i}" for i in range(bucket)]
+        ts = []
+        for _ in range(reps):                  # rejoin: stay under max_len
+            for rid in rids:
+                kv.join(rid)
+            t0 = time.perf_counter()
+            cache, _ = kv.materialize(rids, bucket)
+            kv.harvest(rids, cache, [n] * bucket)
+            ts.append(time.perf_counter() - t0)
+            for rid in rids:
+                kv.retire(rid)
+        out[phase] = sorted(ts)[len(ts) // 2]
+    return out
+
+
+def _calibrate_serve_overhead(template, axes, max_len: int, bucket: int,
+                              chunk: int, prompt: int, vocab: int,
+                              n: int = 16, warm_steps: int = 6) -> float:
+    """Per-engine-step cost of the full phased serve path minus the
+    model: a near-zero handler through the real PhasedExecutor + PagedKV
+    + engine on a small burst.  Captures everything the noop-executor
+    probe (:func:`_calibrate_engine_overhead`) cannot — token-array
+    builds, materialize/harvest page copies, logits transfer, sampling."""
+    from repro.serve import (AdmissionQueue, ContinuousBatcher, PagedKV,
+                             PhasedExecutor, Request, ServeEngine,
+                             ServeMetrics, ShortestJobFirst)
+    from repro.training import phase_context_fn
+
+    def trivial_builder(spec):
+        def f(params, cache, tokens, pos, n_new):
+            toks = tokens if tokens.ndim == 2 else tokens[:, None]
+            logits = toks[:, -1:].astype(jnp.float32) * jnp.ones(
+                (vocab,), jnp.float32)
+            return logits, cache
+        return f
+
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("serve_ov_probe", trivial_builder,
+                          context_fn=phase_context_fn)
+    kv = PagedKV(template, axes, max_len=max_len,
+                 capacity_tokens=2 * bucket * max_len, page_size=8)
+    executor = PhasedExecutor(handler, None, kv, prefill_chunk=chunk,
+                              vocab_size=vocab)
+    metrics = ServeMetrics()
+    controller = Controller(handler, lambda: ExhaustiveSweep([{}]),
+                            dwell=10000, wait_compiles=True, prefetch=0)
+    engine = ServeEngine(handler, controller,
+                         ContinuousBatcher(bucket, scheme="single"),
+                         ShortestJobFirst(), executor=executor,
+                         queue=AdmissionQueue(depth=n + bucket),
+                         metrics=metrics)
+    for _ in range(n):
+        engine.submit(Request(prompt_tokens=prompt, max_new_tokens=8))
+    steps = 0
+    t_mark, s_mark = None, 0
+    while metrics.completed < n and steps < 10_000:
+        engine.step()
+        steps += 1
+        if steps == warm_steps:                 # past both phase compiles
+            t_mark, s_mark = time.perf_counter(), steps
+    ov = ((time.perf_counter() - t_mark) / max(1, steps - s_mark)
+          if t_mark is not None else 0.0)
+    rt.shutdown()
+    return ov
+
+
+def run_disagg(d: int = 512, vocab: int = 32, bucket: int = 8,
+               chunk: int = 64, prompt: int = 192, budgets=(4, 8),
+               n_requests: int = 128, slo_slack: float = 1.0,
+               dwell: int = 6, seed: int = 11, page_size: int = 8,
+               max_wall_s: float = 120.0) -> dict:
+    """Prefill/decode disaggregation over the paged KV runtime vs a
+    phase-blind baseline.
+
+    Both runs replay the same prompt-heavy open-loop schedule through the
+    *same* machinery — :class:`~repro.serve.executor.PhasedExecutor`
+    (chunked prefill interleaved with decode) over a
+    :class:`~repro.serve.kv.PagedKV` manager — and differ only in the two
+    things the tentpole claims matter:
+
+    * **context keying** — the disagg run dispatches through
+      ``(phase, bucket)`` contexts (``phase_context_fn``), so the
+      Controller settles prefill and decode on *different* ``tile``
+      configs; the baseline keys by bucket alone, so one config must
+      serve both phases and compromises one of them
+      (:func:`_disagg_builder` makes both compromises measurably bad),
+    * **KV geometry** — the disagg run stores per-request state in small
+      pages; the baseline uses the contiguous one-slab-per-request
+      layout (the shared-ring descendant).
+
+    The Controller metric is each context's own per-call latency (EWMA,
+    as in :func:`run_mixed`) — interleaving makes wall-clock rate
+    confounded by whatever the *other* phase is dwelling on.  The load is
+    a **saturating burst** (all requests arrive at once), so the engine
+    stays batch-full and wall time is the service *makespan* — a
+    deterministic function of the settled configs, not of arrival-process
+    jitter.  Every request shares one deadline: the geometric mean of the
+    two *predicted makespans* (from the measured per-phase step costs,
+    plus an exploration allowance both runs pay).  The disagg run drains
+    the whole burst before the deadline; the phase-blind run's makespan
+    overshoots it by ``sqrt(blind/opt)``, so its stragglers miss — and
+    its wall is longer — which compound into the goodput gap.
+    Acceptance: distinct settled per-phase configs and disagg goodput >=
+    the phase-blind baseline.
+    """
+    import random as _random
+
+    from repro.serve import (AdmissionQueue, ContinuousBatcher,
+                             OpenLoopSource, PagedKV, PhasedExecutor,
+                             Request, ServeEngine, ServeMetrics,
+                             ShortestJobFirst)
+    from repro.training import phase_context_fn
+
+    max_len = prompt + max(budgets) + page_size     # headroom: one page
+    rng_w = __import__("numpy").random.RandomState(0)
+    w = jnp.asarray(0.05 * rng_w.randn(d, d).astype("float32"))
+    # The paged state is deliberately thin (the synthetic handler's cost
+    # lives in ``w``-sized compute, not cache traffic): the scenario under
+    # test is phase-context settling, so per-step KV traffic should not
+    # drown the phase asymmetry.  Page mechanics are still fully
+    # exercised — ~26 pages per request through join/harvest/retire.
+    template = {"k": jnp.zeros((1, max_len, 8), jnp.float32)}
+    axes = {"k": ("batch", "seq_kv", "model")}
+
+    # -- calibration (measured on this host, through a real handler) -----------
+    rt = IridescentRuntime(async_compile=False)
+    calib = rt.register("disagg_calib", _disagg_builder(d, vocab),
+                        context_fn=phase_context_fn)
+    cache0 = {"k": jnp.zeros((bucket, max_len, 8), jnp.float32)}
+    costs = _calibrate_disagg(calib, w, cache0, bucket, chunk)
+    rt.shutdown()
+    kv_cycle = _calibrate_kv_cycle(template, axes, max_len, bucket,
+                                   chunk, page_size)
+    overhead = _calibrate_serve_overhead(template, axes, max_len, bucket,
+                                         chunk, prompt, vocab)
+    steps_pre = -(-prompt // chunk)
+    g_mean = sum(budgets) / len(budgets)
+
+    def service_s(c_pre: float, c_dec: float, g: float) -> float:
+        return (steps_pre * (c_pre + overhead)
+                + g * (c_dec + overhead))
+
+    def opt_s(g):                    # best per-phase configs
+        return service_s(costs[("prefill", 64)], costs[("decode", 8)], g)
+
+    def blind_s(g):                  # best phase-blind compromise
+        return min(service_s(costs[("prefill", t)], costs[("decode", t)], g)
+                   for t in (8, 64))
+
+    # Predicted burst makespans: every step serves ``bucket`` rows, so the
+    # backlog is n/bucket request-equivalents of service, plus an
+    # exploration allowance (each context dwells on both tiles; both runs
+    # pay it).  The shared deadline is the geometric mean of the two
+    # predictions: the disagg run drains before it (margin
+    # sqrt(blind/opt)/slack), the phase-blind run overshoots it by the
+    # same factor — a makespan comparison, immune to arrival jitter.
+    explore_pad = dwell * sum(
+        costs[(p, t)] + overhead
+        for p in ("prefill", "decode") for t in (8, 64))
+
+    def makespan_s(per_req: float) -> float:
+        return n_requests / bucket * per_req + explore_pad
+
+    deadline = slo_slack * (makespan_s(opt_s(g_mean))
+                            * makespan_s(blind_s(g_mean))) ** 0.5
+
+    def schedule():
+        rng = _random.Random(seed)
+        return [(i * 1e-4, Request(prompt_tokens=prompt,
+                                   max_new_tokens=rng.choice(budgets),
+                                   deadline_s=deadline))
+                for i in range(n_requests)]
+
+    def run_once(disagg: bool) -> dict:
+        # Synchronous compiles + wait_compiles=True: with 4 tiny variants
+        # per run, clean dwell attribution matters more than compile
+        # pipelining here — a dwell measured on the fallback variant
+        # (compile still in flight) would credit one tile with the
+        # other's latency (pipelining has its own scenarios above).
+        rt = IridescentRuntime(async_compile=False)
+        context_fn = (phase_context_fn if disagg
+                      else lambda a, k: int(a[2].shape[0]))
+        handler = rt.register("disagg_step", _disagg_builder(d, vocab),
+                              context_fn=context_fn)
+        latency = {}                 # context key -> per-call seconds EWMA
+
+        def timed_handler(params, cache, tokens, pos, n_new):
+            key = context_fn((params, cache, tokens, pos, n_new), {})
+            t0 = time.perf_counter()
+            logits, new_cache = handler(params, cache, tokens, pos, n_new)
+            jax.block_until_ready(logits)
+            latency.setdefault(key, EWMA(0.5)).update(
+                time.perf_counter() - t0)
+            return logits, new_cache
+
+        def context_latency_rate(view):
+            v = latency[view.key].value if view.key in latency else None
+            return 1.0 / max(v, 1e-9) if v else 0.0
+
+        controller = Controller(
+            handler, lambda: ExhaustiveSweep([{"tile": 8}, {"tile": 64}]),
+            metric=context_latency_rate, dwell=dwell,
+            change_detector=lambda: ChangeDetector(float("inf")),
+            wait_compiles=True, prefetch=0)
+        kv = PagedKV(template, axes, max_len=max_len,
+                     capacity_tokens=2 * bucket * max_len,
+                     page_size=page_size if disagg else max_len,
+                     layout="paged" if disagg else "contig")
+        executor = PhasedExecutor(timed_handler, w, kv,
+                                  prefill_chunk=chunk, vocab_size=vocab)
+        metrics = ServeMetrics()
+        batcher = ContinuousBatcher(bucket, scheme="single")
+        engine = ServeEngine(
+            handler, controller, batcher, ShortestJobFirst(),
+            executor=executor,
+            queue=AdmissionQueue(depth=n_requests + bucket,
+                                 policy="shed-oldest"),
+            metrics=metrics)
+        source = OpenLoopSource(engine.queue, schedule())
+        t0 = time.perf_counter()
+        engine.run(source=source, duration_s=max_wall_s)
+        engine.drain(timeout_s=max_wall_s / 2)
+        wall = time.perf_counter() - t0
+        stats = engine.stats()
+        serve = stats["serve"]
+        best = controller.best_configs()
+        status = controller.status()
+        contexts = {
+            str(key): {
+                "config": {kk: repr(vv) for kk, vv in (cfg or {}).items()},
+                "phase": status.get(key, {}).get("phase"),
+                "calls": status.get(key, {}).get("calls"),
+            }
+            for key, cfg in best.items()}
+        row = {
+            "mode": "disagg" if disagg else "phase_blind",
+            "kv_layout": list(kv.active_geometry()),
+            "wall_s": round(wall, 3),
+            "offered": stats["queue"]["submitted"],
+            "completed": serve["completed"],
+            "completed_tokens": serve["completed_tokens"],
+            "goodput_tok_per_s": round(serve["goodput_tokens"] / wall, 2),
+            "tok_per_s": round(serve["completed_tokens"] / wall, 2),
+            "slo_met": serve["slo_met"],
+            "slo_missed": serve["slo_missed"],
+            "shed": stats["queue"]["shed"] + serve["shed"],
+            "shed_errors": stats["queue"]["shed_errors"],
+            "latency_p50_ms": serve["latency_p50_ms"],
+            "latency_p95_ms": serve["latency_p95_ms"],
+            "ttft_p50_ms": serve["ttft_p50_ms"],
+            "phase_steps": dict(stats.get("phase_steps", {})),
+            "contexts": contexts,
+            "kv_pools": kv.stats()["pools"],
+        }
+        if disagg:
+            pre = best.get(("prefill", bucket)) or {}
+            dec = best.get(("decode", bucket)) or {}
+            row["prefill_tile"] = pre.get("tile")
+            row["decode_tile"] = dec.get("tile")
+        rt.shutdown()
+        return row
+
+    disagg = run_once(True)
+    baseline = run_once(False)
+    return {
+        "seed": seed,
+        "d": d,
+        "bucket": bucket,
+        "prefill_chunk": chunk,
+        "prompt_tokens": prompt,
+        "budgets": list(budgets),
+        "calibration_ms": {
+            **{f"{p}_tile{t}": round(c * 1e3, 3)
+               for (p, t), c in costs.items()},
+            **{f"kv_cycle_{p}": round(c * 1e3, 3)
+               for p, c in kv_cycle.items()},
+            "serve_overhead": round(overhead * 1e3, 3)},
+        "service_ms": {"disagg": round(opt_s(g_mean) * 1e3, 3),
+                       "phase_blind": round(blind_s(g_mean) * 1e3, 3)},
+        "makespan_est_ms": {
+            "disagg": round(makespan_s(opt_s(g_mean)) * 1e3, 3),
+            "phase_blind": round(makespan_s(blind_s(g_mean)) * 1e3, 3)},
+        "deadline_ms": round(deadline * 1e3, 3),
+        "disagg": disagg,
+        "baseline": baseline,
+        "distinct_phase_configs": (
+            disagg["prefill_tile"] is not None
+            and disagg["decode_tile"] is not None
+            and disagg["prefill_tile"] != disagg["decode_tile"]),
+        "disagg_ge_baseline": (disagg["goodput_tok_per_s"]
+                               >= baseline["goodput_tok_per_s"]),
+    }
+
+
 def write_json(path: str, result: dict) -> None:
     with open(path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
@@ -490,10 +876,12 @@ def run() -> list[Row]:
     result = run_serve()
     result["mixed"] = run_mixed()
     result["open_loop"] = run_open_loop()
+    result["disagg"] = run_disagg()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
     mixed = result["mixed"]
     ol = result["open_loop"]
+    dg = result["disagg"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
             f"wall={result['wall_s']}s"),
@@ -514,10 +902,17 @@ def run() -> list[Row]:
             f"scheme={ol['tuned']['scheme']}"),
         Row("serve/open_loop_p95_ms", ol["tuned"]["latency_p95_ms"],
             f"single={ol['single_bucket']['latency_p95_ms']}"),
+        Row("serve/disagg_goodput", dg["disagg"]["goodput_tok_per_s"],
+            f"baseline={dg['baseline']['goodput_tok_per_s']} "
+            f"tiles=pre:{dg['disagg']['prefill_tile']}"
+            f"/dec:{dg['disagg']['decode_tile']}"),
+        Row("serve/disagg_distinct_configs",
+            float(dg["distinct_phase_configs"]),
+            f"ttft_p50={dg['disagg']['ttft_p50_ms']}ms"),
     ]
 
 
-_SCENARIOS = ("all", "serve", "mixed", "open_loop")
+_SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg")
 
 
 def main() -> None:
@@ -556,6 +951,8 @@ def main() -> None:
     if args.scenario in ("all", "open_loop"):
         result["open_loop"] = run_open_loop(
             phase_s=args.open_loop_phase_s)
+    if args.scenario in ("all", "disagg"):
+        result["disagg"] = run_disagg()
     write_json(args.out, result)
     print(json.dumps(result, indent=1, sort_keys=True))
 

@@ -2,13 +2,18 @@
 
     PYTHONPATH=src python examples/serve_adaptive.py
     PYTHONPATH=src python examples/serve_adaptive.py --arch rwkv6-1.6b
+    PYTHONPATH=src python examples/serve_adaptive.py \
+        --prefill-chunk 32 --kv-page-size 8 --scheduler sjf
 
-Open-loop requests (pseudo-Poisson arrivals, mixed decode budgets) flow
-through the :mod:`repro.serve` engine: admission queue -> scheduler ->
-continuous batcher -> the decode handler's per-bucket dispatch snapshots.
-The Controller tunes decode spec points (cache dtype; chunk length for the
-recurrent archs) per batch bucket, and the bucket boundaries themselves
-are tuned online against measured goodput.
+Open-loop requests (pseudo-Poisson arrivals, mixed prompt/decode lengths)
+flow through the :mod:`repro.serve` engine: admission queue -> scheduler
+-> continuous batcher -> phase-disaggregated execution over the paged
+per-request KV runtime.  Chunked prefill interleaves with decode steps,
+and each phase dispatches through its own ``(phase, bucket)``
+specialization contexts — the Controller tunes decode spec points (cache
+dtype; chunk length for the recurrent archs) separately for prefill and
+decode, while the bucket boundaries and the KV page geometry are tuned
+online against measured goodput by their own plan handlers.
 """
 import sys
 

@@ -112,7 +112,8 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
     brings every handler back to its tuned configs with zero recompiles.
     Returns True if any state was applied or seeded.
     """
-    from repro.core.runtime import DEFAULT_CONTEXT, encode_context_key
+    from repro.core.runtime import (DEFAULT_CONTEXT, decode_context_key,
+                                    encode_context_key)
 
     if not os.path.exists(path):
         return False
@@ -154,6 +155,11 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
                            "keeping generic", name)
             continue
         for enc_key, cfg in ctx_cfgs.items():
+            # Normalize the stored encoding through decode -> re-encode:
+            # files written by the legacy repr encoder ("('prefill', 4)")
+            # land on the same canonical string the live context's key
+            # produces, so their seeds still apply.
+            enc_key = encode_context_key(decode_context_key(enc_key))
             # Best-effort by contract: a stale or malformed config (points
             # renamed, builder changed, cross-host payloads, truncated
             # file) must degrade to the generic variant, never crash

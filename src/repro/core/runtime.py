@@ -57,18 +57,92 @@ from repro.core.variant_cache import VariantCache, spec_fingerprint
 logger = logging.getLogger("repro.core.runtime")
 
 __all__ = ["IridescentRuntime", "Handler", "Variant", "ContextView",
-           "DEFAULT_CONTEXT", "encode_context_key"]
+           "DEFAULT_CONTEXT", "encode_context_key", "decode_context_key"]
 
 #: Context key used when no ``context_fn`` is given (and the target of the
 #: legacy, context-less policy API: ``rt.specialize(cfg)`` etc.).
 DEFAULT_CONTEXT = "default"
 
 
+def _canonical_key(key: Any) -> Any:
+    """Normalize a context key into the JSON-encodable canonical form.
+
+    Tuples become tagged lists (so they survive JSON and decode back to
+    tuples — the serve engine's ``(phase, bucket)`` keys must round-trip
+    losslessly); numpy scalars collapse to their Python value so
+    ``("prefill", np.int32(4))`` and ``("prefill", 4)`` encode identically.
+    Anything non-encodable falls back to a tagged ``repr`` (deterministic,
+    matched by string equality, not invertible — same contract the old
+    repr-based encoder had for exotic keys).
+    """
+    if isinstance(key, tuple):
+        return {"t": [_canonical_key(k) for k in key]}
+    if isinstance(key, _OpaqueKey):
+        return {"r": str(key)}
+    if isinstance(key, bool) or key is None or isinstance(key, str):
+        return key
+    if isinstance(key, (int, float)):
+        return key
+    item = getattr(key, "item", None)
+    if item is not None and getattr(key, "shape", None) == ():
+        try:
+            return _canonical_key(item())
+        except Exception:
+            pass
+    return {"r": repr(key)}
+
+
+class _OpaqueKey(str):
+    """Decoded stand-in for a key that only persisted as a repr string.
+
+    Re-encoding it reproduces the tagged-repr form, so
+    ``encode(decode(enc)) == enc`` holds for opaque entries too (the
+    normalization `restore_spec_state` relies on)."""
+
+    __slots__ = ()
+
+
+def _uncanonical_key(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if "t" in obj and len(obj) == 1:
+            return tuple(_uncanonical_key(x) for x in obj["t"])
+        if "r" in obj and len(obj) == 1:
+            return _OpaqueKey(obj["r"])
+    if isinstance(obj, list):           # defensive (hand-edited files)
+        return tuple(_uncanonical_key(x) for x in obj)
+    return obj
+
+
 def encode_context_key(key: Any) -> str:
-    """Stable string encoding of a context key for persistence
-    (``spec_state.json``).  Matching is done on encoded strings, so the
-    encoding only needs to be deterministic, not invertible."""
-    return repr(key)
+    """Stable, **invertible** string encoding of a context key for
+    persistence (``spec_state.json``).  Flat hashables and tuples of them
+    (e.g. the serve engine's ``(phase, bucket)`` keys) round-trip through
+    :func:`decode_context_key` losslessly; exotic keys degrade to a
+    deterministic repr tag matched by string equality only."""
+    import json as _json
+    return _json.dumps(_canonical_key(key), sort_keys=True,
+                       separators=(",", ":"))
+
+
+def decode_context_key(encoded: str) -> Any:
+    """Inverse of :func:`encode_context_key`.
+
+    Also tolerates the legacy repr-based encoding (pre-tuple-key format):
+    ``"'default'"`` / ``"4"`` / ``"('prefill', 4)"`` decode via a literal
+    parse, so old ``spec_state.json`` files keep restoring.  A string that
+    parses under neither scheme is returned as-is (opaque key)."""
+    import ast as _ast
+    import json as _json
+    try:
+        return _uncanonical_key(_json.loads(encoded))
+    except (ValueError, TypeError):
+        pass
+    try:
+        return _ast.literal_eval(encoded)
+    except (ValueError, SyntaxError):
+        # Legacy repr of an exotic key: keep it opaque so re-encoding
+        # lands on the tagged-repr form a live key of that repr produces.
+        return _OpaqueKey(encoded)
 
 
 def _abstractify(x: Any) -> Any:

@@ -7,27 +7,38 @@ The driver is built on the :mod:`repro.serve` engine: requests arrive
 open-loop (deterministic pseudo-Poisson at ``--rate``), pass through a
 bounded admission queue with backpressure, are ordered by a pluggable
 scheduler (``--scheduler fcfs|sjf|deadline``), and are packed each
-iteration into bucketed batch shapes by the continuous batcher.  The
-padded bucket size is the handler's ``context_fn`` key, so every bucket
-dispatches through its own specialization context and the Iridescent
-``Controller`` tunes decode spec points (cache dtype, kernel impl, chunk
-length for recurrent archs) per bucket.  The bucket boundaries are
-themselves a spec point: a ``BucketTuner`` searches bucketing schemes
-online against measured goodput (in-SLO tokens/s).
+iteration into bucketed batch shapes by the continuous batcher.
 
-Migration note: every pre-engine flag (``--arch --batch --max-len --steps
---dwell --compile-workers --prefetch --budget --cache-dir``) is preserved;
-``--batch`` now caps the *largest* batch bucket and ``--steps`` caps engine
-iterations.  With ``--cache-dir`` the runtime persists AOT executables and
-the tuned per-context configurations (including the bucket scheme, which
-rides ``spec_state.json`` on the ``bucket_plan`` handler) — a drained and
-restarted server resumes every context's tuned config with zero
-recompiles.
+Execution is **phase-disaggregated** over a **paged per-request KV
+runtime**: every request's decode state lives in block-paged host pools
+(:class:`~repro.serve.kv.PagedKV` — fixed-size pages, per-request page
+tables, free-list reuse on retire), and each engine step runs either a
+chunked-prefill or a decode batch through one registered serve handler
+whose context key is ``(phase, bucket)``
+(:func:`~repro.training.steps.phase_context_fn`).  The Iridescent
+``Controller`` therefore tunes prefill and decode *separately* per
+bucket — they are free to settle on different configs.  Two more spec
+points ride the same machinery: the bucket-boundary scheme
+(``BucketTuner``) and the KV page geometry (``KVTuner`` — paged page
+size vs. contiguous-per-request), both searched online against measured
+goodput (in-SLO tokens/s).
 
-Continuous-batching caveat (multi-host serve story, see ROADMAP): the
-decode step's cache position is a shared ring index, so per-request KV
-isolation across join/retire is approximate — the driver is a load and
-specialization harness, not a correctness-of-sampling harness.
+Migration note: the old in-file ``DecodeExecutor`` (one shared ring
+cache per bucket — a load harness, not a sampling-correctness harness)
+moved to :mod:`repro.serve.executor` as the paged
+``PrefillExecutor``/``DecodeExecutor`` pair behind a
+:class:`~repro.serve.executor.PhasedExecutor`; decode is now real
+(per-request isolated state, greedy sampling over synthetic prompts).
+Every pre-engine flag (``--arch --batch --max-len --steps --dwell
+--compile-workers --prefetch --budget --cache-dir``) is preserved;
+``--batch`` caps the largest batch bucket and ``--steps`` caps engine
+iterations.  New flags: ``--kv-page-size`` (initial page geometry) and
+``--prefill-chunk`` (prompt tokens consumed per prefill step).  With
+``--cache-dir`` the runtime persists AOT executables and the tuned
+per-context configurations (per-phase configs ride ``spec_state.json``
+as tuple keys; bucket scheme and KV plan ride their plan handlers) — a
+drained and restarted server resumes every context's tuned config with
+zero recompiles.
 """
 from __future__ import annotations
 
@@ -38,8 +49,6 @@ import random
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import restore_spec_state
@@ -48,49 +57,15 @@ from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
 from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
-                         OpenLoopSource, Request, ServeEngine, ServeMetrics,
-                         bucket_plan_builder, make_scheduler,
-                         pseudo_poisson_times)
-from repro.training import make_decode_builder
+                         KVTuner, OpenLoopSource, PagedKV, PhasedExecutor,
+                         Request, ServeEngine, ServeMetrics,
+                         bucket_plan_builder, kv_plan_builder,
+                         make_scheduler, pseudo_poisson_times)
+from repro.serve.batcher import BUCKET_POINT
+from repro.serve.kv import KV_LAYOUT_POINT, KV_PAGE_POINT
+from repro.training import make_serve_builder, phase_context_fn
 
-
-class DecodeExecutor:
-    """Adapts packed batches to ``serve_step(params, cache, tokens, pos)``.
-
-    One KV/state cache per batch bucket (materialized lazily), so compute
-    scales with the padded bucket size instead of the batch cap; the
-    handler's ``context_fn`` sees the token batch dimension — exactly the
-    bucket — and routes to that bucket's dispatch snapshot.
-    """
-
-    def __init__(self, handler, params, cfg, max_len: int):
-        self.handler = handler
-        self.params = params
-        self.cfg = cfg
-        self.max_len = max_len
-        self.caches: dict[int, object] = {}
-        self._step = 0
-
-    def _cache(self, bucket: int):
-        if bucket not in self.caches:
-            self.caches[bucket] = model.init_cache(
-                self.cfg, bucket, self.max_len,
-                RunOptions(decode_cache_dtype="float32"))
-        return self.caches[bucket]
-
-    def execute(self, batch) -> None:
-        b = batch.size
-        toks = np.zeros((b,), np.int32)
-        for i, req in enumerate(batch.requests):
-            toks[i] = req.payload or 0
-        pos = jnp.int32(self._step % self.max_len)
-        logits, new_cache = self.handler(
-            self.params, self._cache(b), jnp.asarray(toks), pos)
-        self.caches[b] = new_cache            # donated arg: keep the fresh one
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        for i, req in enumerate(batch.requests):
-            req.payload = int(nxt[i])
-        self._step += 1
+KV_PAGE_SIZES = (8, 16, 64)
 
 
 def synthetic_workload(n: int, rate: float, seed: int = 0,
@@ -125,6 +100,12 @@ def main() -> None:
     ap.add_argument("--cache-dir", default=None,
                     help="persist AOT executables + tuned config here; a "
                          "warm restart then performs zero recompiles")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="initial KV page size (tokens per page); the "
+                         "KVTuner searches the geometry menu online")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens consumed per chunked-prefill step "
+                         "(long prompts interleave with decode steps)")
     ap.add_argument("--requests", type=int, default=64,
                     help="open-loop workload size")
     ap.add_argument("--rate", type=float, default=40.0,
@@ -139,6 +120,8 @@ def main() -> None:
                     choices=("fcfs", "sjf", "deadline"))
     ap.add_argument("--bucket-dwell", type=int, default=25,
                     help="engine steps per bucket-scheme candidate")
+    ap.add_argument("--kv-dwell", type=int, default=25,
+                    help="engine steps per KV-geometry candidate")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -149,29 +132,46 @@ def main() -> None:
                            max_compile_workers=args.compile_workers,
                            variant_cache=variant_cache)
     handler = rt.register(
-        "serve_step", make_decode_builder(cfg, kernel_impl="xla"),
-        context_fn=lambda a, k: int(a[2].shape[0]),   # tokens batch = bucket
+        "serve_step", make_serve_builder(cfg, kernel_impl="xla"),
+        context_fn=phase_context_fn,          # (phase, bucket) contexts
         donate_argnums=1)
     batcher = ContinuousBatcher(args.batch)
     plan_handler = rt.register(
         "bucket_plan",
         bucket_plan_builder(list(batcher.schemes), batcher.default_scheme))
+    page_sizes = tuple(sorted({args.kv_page_size, *KV_PAGE_SIZES}))
+    kv_plan_handler = rt.register(
+        "kv_plan",
+        kv_plan_builder(("paged", "contig"), page_sizes, "paged",
+                        args.kv_page_size))
 
-    # Restore *before* building the controllers: per-bucket configs are
-    # seeded onto the handler (the Controller warm-starts each context as
-    # its traffic materializes), and the bucket scheme lands on the plan
-    # handler's active config.
+    # Restore *before* building the controllers: per-(phase,bucket) configs
+    # are seeded onto the handler (the Controller warm-starts each context
+    # as its traffic materializes), and the tuned bucket scheme / KV plan
+    # land on their plan handlers' active configs.
     spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
                        if args.cache_dir else None)
     initial_scheme = None
+    initial_plan = None
     if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
-        from repro.serve.batcher import BUCKET_POINT
         initial_scheme = plan_handler.active_config().get(BUCKET_POINT)
+        kv_cfg = kv_plan_handler.active_config()
+        if KV_LAYOUT_POINT in kv_cfg:
+            initial_plan = (kv_cfg[KV_LAYOUT_POINT],
+                            kv_cfg.get(KV_PAGE_POINT, args.kv_page_size))
         print(f"restored spec state: bucket scheme={initial_scheme}, "
+              f"kv plan={initial_plan}, "
               f"seeded contexts={list(handler._seeded)}")
 
     params = model.init_params(jax.random.PRNGKey(0), cfg)
-    executor = DecodeExecutor(handler, params, cfg, args.max_len)
+    run_opts = RunOptions(decode_cache_dtype="float32")
+    kv = PagedKV(model.init_cache(cfg, 1, args.max_len, run_opts),
+                 model.cache_axes(cfg), max_len=args.max_len,
+                 capacity_tokens=args.batch * args.max_len,
+                 page_size=args.kv_page_size)
+    executor = PhasedExecutor(handler, params, kv,
+                              prefill_chunk=args.prefill_chunk,
+                              vocab_size=cfg.vocab_size)
 
     space = handler.spec_space()
     labels = ["cache_dtype", "rmsnorm_impl"] + (
@@ -187,11 +187,15 @@ def main() -> None:
     tuner = BucketTuner(batcher, metric=metrics.interval_goodput,
                         dwell=args.bucket_dwell, plan_handler=plan_handler,
                         initial_scheme=initial_scheme)
+    kv_tuner = KVTuner(kv, metric=metrics.interval_goodput,
+                       dwell=args.kv_dwell, page_sizes=page_sizes,
+                       plan_handler=kv_plan_handler,
+                       initial_plan=initial_plan)
     engine = ServeEngine(
         handler, controller, batcher, make_scheduler(args.scheduler),
         executor=executor,
         queue=AdmissionQueue(depth=args.queue_depth, policy=args.shed_policy),
-        tuner=tuner, metrics=metrics, slo_s=slo_s)
+        tuner=tuner, kv_tuner=kv_tuner, metrics=metrics, slo_s=slo_s)
 
     schedule = synthetic_workload(args.requests, args.rate, seed=args.seed)
     source = OpenLoopSource(engine.queue, schedule)
@@ -209,12 +213,15 @@ def main() -> None:
     print(f"p50/p95/p99 latency ms: {served['latency_p50_ms']} / "
           f"{served['latency_p95_ms']} / {served['latency_p99_ms']}")
     print(f"bucket steps: {stats['bucket_steps']}  "
+          f"phase steps: {stats['phase_steps']}  "
           f"scheme: {tuner.active_scheme()} "
           f"(boundaries {batcher.schemes[tuner.active_scheme()]})")
+    print(f"kv: plan={kv_tuner.active_plan()} pools="
+          f"{json.dumps(kv.stats()['pools'])}")
     best_cfgs = {str(k): ({kk: repr(vv) for kk, vv in cfg.items()}
                           if cfg is not None else None)
                  for k, cfg in controller.best_configs().items()}
-    print(f"per-bucket configs: {json.dumps(best_cfgs)}")
+    print(f"per-context configs: {json.dumps(best_cfgs)}")
     print(f"compile stats: {json.dumps(rt.compile_stats())}")
     # shutdown drains (already drained), persists spec state once settled,
     # and stops the compile workers.

@@ -108,7 +108,22 @@ def gqa_cache_axes(cfg: ModelConfig) -> dict:
 def decode_gqa(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
                cfg: ModelConfig, opts: KernelOptions, *,
                window: int | None = None) -> tuple[jnp.ndarray, dict]:
-    """One decode step. x (B,1,d), pos scalar int32 -> ((B,1,d), cache)."""
+    """One decode step. x (B,1,d) -> ((B,1,d), cache).
+
+    ``pos`` scalar int32: the classic shared-ring path — every row is at
+    the same position, the write lands in ring slot ``pos % w``, and
+    validity comes from the shared ``slot_pos`` map.
+
+    ``pos`` vector (B,) int32: per-row positions for paged per-request
+    caches — row b writes slot ``pos[b]`` (contiguous layout: slot index
+    == absolute position, so the cache seq capacity must be the full
+    max_len) and validity is ``slot <= pos[b]``; ``slot_pos`` passes
+    through untouched.  Rows whose position is out of range (>= w) write
+    nothing, which is what lets chunked prefill keep inactive rows
+    harmless.
+    """
+    if jnp.ndim(pos) == 1:
+        return _decode_gqa_rows(p, cache, x, pos, cfg, opts, window=window)
     b = x.shape[0]
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     g = h // hk
@@ -134,3 +149,33 @@ def decode_gqa(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
     out = out.reshape(b, h, 1, dh).astype(x.dtype)
     y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+def _decode_gqa_rows(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
+                     cfg: ModelConfig, opts: KernelOptions, *,
+                     window: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """Vector-pos decode: row b at position pos[b] (see :func:`decode_gqa`)."""
+    b = x.shape[0]
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // hk
+    q, k, v = _project_qkv(p, x, cfg, opts, pos[:, None, None])
+    w = cache["k"].shape[2]
+    slots = jnp.arange(w, dtype=jnp.int32)
+    at = slots[None, :] == pos[:, None]                 # (B,w) write mask
+    ck = jnp.where(at[:, None, :, None], k.astype(cache["k"].dtype),
+                   cache["k"])
+    cv = jnp.where(at[:, None, :, None], v.astype(cache["v"].dtype),
+                   cache["v"])
+
+    qg = q.reshape(b, hk, g, dh)
+    scores = jnp.einsum("bhgk,bhwk->bhgw", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (dh ** -0.5)
+    valid = slots[None, :] <= pos[:, None]              # contiguous prefix
+    if window is not None:
+        valid &= slots[None, :] > pos[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgw,bhwk->bhgk", probs, cv.astype(jnp.float32))
+    out = out.reshape(b, h, 1, dh).astype(x.dtype)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv, "slot_pos": cache["slot_pos"]}

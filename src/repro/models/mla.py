@@ -123,7 +123,14 @@ def mla_cache_axes(cfg: ModelConfig) -> dict:
 def decode_mla(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
                cfg: ModelConfig, opts: KernelOptions, *,
                window: int | None = None) -> tuple[jnp.ndarray, dict]:
-    """One absorbed decode step. x (B,1,d) -> ((B,1,d), cache)."""
+    """One absorbed decode step. x (B,1,d) -> ((B,1,d), cache).
+
+    ``pos`` scalar: shared ring slot + ``slot_pos`` validity (all rows in
+    lockstep).  ``pos`` vector (B,): per-row contiguous slots for paged
+    per-request caches — mirrors :func:`repro.models.attention.decode_gqa`.
+    """
+    if jnp.ndim(pos) == 1:
+        return _decode_mla_rows(p, cache, x, pos, cfg, opts, window=window)
     b = x.shape[0]
     h, nd, rd, dh = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.d_head
     cdt = x.dtype
@@ -154,3 +161,37 @@ def decode_mla(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
                      p["w_uv"].astype(cdt))              # (B,H,dh)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(cdt))[:, None]
     return y, {"ckv": cckv, "k_rope": ckr, "slot_pos": spos}
+
+
+def _decode_mla_rows(p: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray,
+                     cfg: ModelConfig, opts: KernelOptions, *,
+                     window: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """Vector-pos absorbed decode: row b at position pos[b]."""
+    h, nd, rd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    cdt = x.dtype
+    q_nope, q_rope, ckv, k_rope = _latents(p, x, cfg, opts, pos[:, None, None])
+    q_eff = jnp.einsum("bhsk,rhk->bhr", q_nope, p["w_uk"].astype(cdt))
+
+    w = cache["ckv"].shape[1]
+    slots = jnp.arange(w, dtype=jnp.int32)
+    at = slots[None, :] == pos[:, None]                 # (B,w) write mask
+    cckv = jnp.where(at[:, :, None], ckv.astype(cache["ckv"].dtype),
+                     cache["ckv"])
+    ckr = jnp.where(at[:, :, None],
+                    k_rope[:, 0].astype(cache["k_rope"].dtype),
+                    cache["k_rope"])
+
+    f32 = jnp.float32
+    scores = (jnp.einsum("bhr,bwr->bhw", q_eff.astype(f32), cckv.astype(f32))
+              + jnp.einsum("bhsk,bwk->bhw", q_rope.astype(f32),
+                           ckr.astype(f32))) * ((nd + rd) ** -0.5)
+    valid = slots[None, :] <= pos[:, None]              # contiguous prefix
+    if window is not None:
+        valid &= slots[None, :] > pos[:, None] - window
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_latent = jnp.einsum("bhw,bwr->bhr", probs, cckv.astype(f32))
+    out = jnp.einsum("bhr,rhk->bhk", o_latent.astype(cdt),
+                     p["w_uv"].astype(cdt))
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(cdt))[:, None]
+    return y, {"ckv": cckv, "k_rope": ckr, "slot_pos": cache["slot_pos"]}

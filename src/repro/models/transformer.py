@@ -35,7 +35,8 @@ from repro.models.config import ModelConfig
 from repro.models.moe import MoEOptions
 
 __all__ = ["RunOptions", "init_params", "param_axes", "apply",
-           "init_cache", "cache_axes", "decode_step", "lm_head_weight"]
+           "init_cache", "cache_axes", "decode_step", "prefill_chunk",
+           "lm_head_weight"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -399,3 +400,59 @@ def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
     head = lm_head_weight(params, cfg)
     logits = (xf[:, 0] @ head).astype(jnp.float32)
     return logits[:, : cfg.vocab_size], new_cache
+
+
+def _select_rows(cfg: ModelConfig, active: jnp.ndarray, new_cache: dict,
+                 old_cache: dict) -> dict:
+    """Per-leaf batch-row select: active rows take the new cache, inactive
+    rows keep the old.  Leaf batch axes are located via ``cache_axes`` so
+    this is generic across mixers (attention KV, recurrent row state);
+    leaves without a batch axis (shared maps) pass through new."""
+    axes_leaves = jax.tree_util.tree_leaves(
+        cache_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+    new_leaves, treedef = jax.tree_util.tree_flatten(new_cache)
+    old_leaves, _ = jax.tree_util.tree_flatten(old_cache)
+    out = []
+    for ln, lo, ax in zip(new_leaves, old_leaves, axes_leaves):
+        ax = tuple(ax)
+        if "batch" in ax:
+            bi = ax.index("batch")
+            m = active.reshape((1,) * bi + (-1,) + (1,) * (ln.ndim - bi - 1))
+            out.append(jnp.where(m, ln, lo))
+        else:
+            out.append(ln)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: jnp.ndarray,
+                  pos: jnp.ndarray, n_new: jnp.ndarray, cfg: ModelConfig,
+                  opts: RunOptions) -> tuple[jnp.ndarray, dict]:
+    """Chunked prefill: consume up to C prompt tokens per row.
+
+    ``tokens (B,C)`` int32 (pad with any valid id), ``pos (B,)`` per-row
+    start positions, ``n_new (B,)`` valid token counts (<= C; rows may
+    differ — a short row goes inactive once its tokens are consumed).
+    Returns ``(logits (B,V) at each row's last consumed token, cache)``;
+    rows with ``n_new == 0`` get zero logits.
+
+    Implemented as a ``lax.scan`` of single-token vector-pos decode
+    steps with per-row masking — one compiled program per (bucket, C),
+    correct for every mixer: attention writes land at per-row positions
+    (out-of-range rows write nothing), and recurrent state only advances
+    while a row is active (:func:`_select_rows`).
+    """
+    b, c = tokens.shape
+
+    def step(carry, xs):
+        cache_c, logits_c = carry
+        tok_t, t = xs
+        lg, stepped = decode_step(params, cache_c, tok_t, pos + t, cfg, opts)
+        cache_c = _select_rows(cfg, t < n_new, stepped, cache_c)
+        logits_c = jnp.where((t == n_new - 1)[:, None], lg, logits_c)
+        return (cache_c, logits_c), None
+
+    logits0 = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(
+        step, (cache, logits0),
+        (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+    return logits, cache

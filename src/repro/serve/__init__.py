@@ -10,6 +10,12 @@ online by a Controller against observed goodput), and a
 batch through the handler's per-bucket dispatch snapshot and feeds the
 per-context Controller.
 
+Execution is phase-disaggregated: :mod:`repro.serve.kv` keeps every
+request's decode state isolated in block-paged host pools (page geometry
+is itself a tuned spec point), and :mod:`repro.serve.executor` runs
+chunked prefill and decode as separate ``(phase, bucket)`` specialization
+contexts of one serve handler.
+
 See ``launch/serve.py`` for the LM serving driver built on this package
 and ``benchmarks/serve_bench.py`` for the open-loop evaluation scenario.
 """
@@ -22,6 +28,10 @@ from repro.serve.scheduler import (SCHEDULERS, DeadlineAware, FCFS,
 from repro.serve.metrics import ServeMetrics
 from repro.serve.batcher import (BucketTuner, ContinuousBatcher, PackedBatch,
                                  bucket_plan_builder, default_schemes)
+from repro.serve.kv import (KVTuner, PagedKV, PageError, PagePool, PageTable,
+                            kv_plan_builder)
+from repro.serve.executor import (DecodeExecutor, PhasedExecutor,
+                                  PrefillExecutor)
 from repro.serve.engine import BatchExecutor, ServeEngine
 
 __all__ = [
@@ -31,5 +41,8 @@ __all__ = [
     "make_scheduler", "ServeMetrics",
     "BucketTuner", "ContinuousBatcher", "PackedBatch",
     "bucket_plan_builder", "default_schemes",
+    "KVTuner", "PagedKV", "PageError", "PagePool", "PageTable",
+    "kv_plan_builder",
+    "DecodeExecutor", "PhasedExecutor", "PrefillExecutor",
     "BatchExecutor", "ServeEngine",
 ]

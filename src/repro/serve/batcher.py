@@ -63,16 +63,31 @@ def default_schemes(max_batch: int) -> dict[str, tuple[int, ...]]:
 
 @dataclasses.dataclass
 class PackedBatch:
-    """One engine step's batch: the rows and the bucket they pad to."""
+    """One engine step's batch: the rows and the bucket they pad to.
 
-    requests: list[Request]          # active rows, in slot order
+    Under phased execution (prefill/decode disaggregation) a step runs
+    only one phase's rows: ``requests`` holds the rows this step executes,
+    ``in_flight`` every live row (the engine's full active set), and
+    ``phase`` which specialization context family the step dispatches
+    into.  Legacy (phase-blind) packing leaves ``in_flight`` as None and
+    ``phase`` as "decode" — everything executes every step.
+    """
+
+    requests: list[Request]          # rows this step executes, slot order
     size: int                        # padded batch dimension (bucket)
     joined: list[Request]            # subset of requests that joined now
     scheme: str                      # bucketing scheme that sized it
+    phase: str = "decode"            # "prefill" | "decode"
+    in_flight: "list[Request] | None" = None   # all live rows (phased)
 
     @property
     def pad(self) -> int:
         return self.size - len(self.requests)
+
+    @property
+    def all_rows(self) -> list[Request]:
+        return self.in_flight if self.in_flight is not None \
+            else self.requests
 
 
 class ContinuousBatcher:
@@ -110,6 +125,7 @@ class ContinuousBatcher:
                              f"have {sorted(self.schemes)}")
         self._fixed_scheme = self.default_scheme
         self._tuner: "BucketTuner | None" = None
+        self._prefill_turn = True    # phased packing: alternation state
 
     # -- scheme selection ------------------------------------------------------
     def set_scheme(self, name: str) -> None:
@@ -140,9 +156,20 @@ class ContinuousBatcher:
     # -- packing ---------------------------------------------------------------
     def pack(self, active: Sequence[Request], queue: AdmissionQueue,
              scheduler: Scheduler, now: float,
-             slo_s: float | None = None) -> PackedBatch:
+             slo_s: float | None = None,
+             phased: bool = False) -> PackedBatch:
         """Build the next step's batch: keep in-flight rows, join waiting
-        requests (scheduler order) up to the cap, pad to the bucket."""
+        requests (scheduler order) up to the cap, pad to the bucket.
+
+        With ``phased=True`` the step executes a single phase's rows:
+        in-flight rows partition into prefilling and decoding, and when
+        both phases have work the batcher strictly alternates between
+        them — chunked prefill of long prompts interleaves with decode
+        steps instead of starving them (and vice versa).  The phase a
+        step runs is the first element of the handler's ``(phase,
+        bucket)`` context key, so each phase dispatches through its own
+        specialization contexts.
+        """
         rows = list(active)
         capacity = self.max_batch - len(rows)
         joined: list[Request] = []
@@ -152,9 +179,23 @@ class ContinuousBatcher:
                 req.service_t = now
             rows.extend(joined)
         scheme = self.current_scheme()
-        size = self.bucket(len(rows), scheme) if rows else 0
-        return PackedBatch(requests=rows, size=size, joined=joined,
-                           scheme=scheme)
+        if not phased:
+            size = self.bucket(len(rows), scheme) if rows else 0
+            return PackedBatch(requests=rows, size=size, joined=joined,
+                               scheme=scheme)
+        pre = [r for r in rows if r.prefilling]
+        dec = [r for r in rows if not r.prefilling]
+        if pre and (self._prefill_turn or not dec):
+            phase, selected = "prefill", pre
+        else:
+            phase, selected = "decode", dec
+        if pre and dec:
+            self._prefill_turn = not self._prefill_turn
+        else:
+            self._prefill_turn = True    # next arrival starts with prefill
+        size = self.bucket(len(selected), scheme) if selected else 0
+        return PackedBatch(requests=selected, size=size, joined=joined,
+                           scheme=scheme, phase=phase, in_flight=rows)
 
 
 def bucket_plan_builder(schemes: Sequence[str],

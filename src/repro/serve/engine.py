@@ -49,15 +49,19 @@ __all__ = ["ServeEngine", "BatchExecutor"]
 
 
 class BatchExecutor(Protocol):
-    """Model-side adapter: run one decode step for a packed batch.
+    """Model-side adapter: run one step for a packed batch.
 
-    ``execute(batch)`` must produce one token for every request in
-    ``batch.requests`` (the engine credits ``generated`` itself).  The
-    optional ``retire(request)`` hook is called when a request leaves the
-    batch (free its slot/cache state).
+    ``execute(batch)`` runs the step and may return per-request produced
+    token counts (aligned with ``batch.requests``); returning None means
+    "one token each" (the legacy decode-only contract — the engine
+    credits ``generated`` itself).  Phased executors return 0 for rows
+    still mid-prefill and set ``phased = True`` so the engine packs
+    prefill and decode steps separately.  The optional ``retire(request)``
+    hook is called when a request leaves the batch (free its slot/cache
+    state).
     """
 
-    def execute(self, batch: PackedBatch) -> None: ...
+    def execute(self, batch: PackedBatch) -> "list[int] | None": ...
 
 
 class ServeEngine:
@@ -82,6 +86,7 @@ class ServeEngine:
         executor: BatchExecutor | Callable[[PackedBatch], None] | None = None,
         queue: AdmissionQueue | None = None,
         tuner: BucketTuner | None = None,
+        kv_tuner=None,                       # repro.serve.kv.KVTuner
         metrics: ServeMetrics | None = None,
         slo_s: float | None = None,
         max_batch: int = 8,
@@ -98,6 +103,7 @@ class ServeEngine:
         self.scheduler = scheduler if scheduler is not None else FCFS()
         self.queue = queue if queue is not None else AdmissionQueue()
         self.tuner = tuner
+        self.kv_tuner = kv_tuner
         self.slo_s = slo_s
         self.clock = clock
         self.metrics = metrics if metrics is not None \
@@ -105,6 +111,8 @@ class ServeEngine:
         if callable(executor) and not hasattr(executor, "execute"):
             executor = _FnExecutor(executor)
         self.executor = executor
+        #: phased executors partition steps into prefill and decode
+        self.phased = bool(getattr(executor, "phased", False))
         self.on_completion = on_completion
         #: requests currently in the running batch, in slot order
         self.active: list[Request] = []
@@ -113,6 +121,7 @@ class ServeEngine:
         self.tokens_generated = 0
         self.padded_rows = 0            # wasted rows (padding) across steps
         self.bucket_steps: dict[int, int] = {}
+        self.phase_steps: dict[str, int] = {}
         self._draining = False
 
     # -- client side -----------------------------------------------------------
@@ -132,20 +141,22 @@ class ServeEngine:
         if source is not None:
             source.pump(now)
         batch = self.batcher.pack(self.active, self.queue, self.scheduler,
-                                  now, slo_s=self.slo_s)
+                                  now, slo_s=self.slo_s, phased=self.phased)
         if not batch.requests:
             self.idle_ticks += 1
             return 0
-        self.active = list(batch.requests)
-        self.executor.execute(batch)
+        self.active = list(batch.all_rows)
+        produced = self.executor.execute(batch)
         t_after = self.clock()
         tokens = 0
         finished: list[Request] = []
-        for req in batch.requests:
-            if req.first_token_t is None:
-                req.first_token_t = t_after
-            req.generated += 1
-            tokens += 1
+        for i, req in enumerate(batch.requests):
+            n = 1 if produced is None else int(produced[i])
+            if n > 0:
+                if req.first_token_t is None:
+                    req.first_token_t = t_after
+                req.generated += n
+                tokens += n
             if req.done:
                 finished.append(req)
         for req in finished:
@@ -155,10 +166,14 @@ class ServeEngine:
         self.padded_rows += batch.pad
         self.bucket_steps[batch.size] = \
             self.bucket_steps.get(batch.size, 0) + 1
+        self.phase_steps[batch.phase] = \
+            self.phase_steps.get(batch.phase, 0) + 1
         if self.controller is not None:
             self.controller.step()
         if self.tuner is not None:
             self.tuner.step()
+        if self.kv_tuner is not None:
+            self.kv_tuner.step()
         return tokens
 
     def _retire(self, req: Request, now: float) -> None:
@@ -194,6 +209,8 @@ class ServeEngine:
                 if (source is None or source.exhausted) and \
                         not self.active and not len(self.queue):
                     break
+                if self.active:
+                    continue      # a 0-token prefill step still did work
                 if idle_sleep_s:
                     wait = idle_sleep_s
                     if source is not None:
@@ -262,6 +279,9 @@ class ServeEngine:
         pairs = [(self.handler.name, self.controller)]
         if self.tuner is not None:
             pairs.append((self.tuner.handler.name, self.tuner.controller))
+        if self.kv_tuner is not None:
+            pairs.append((self.kv_tuner.handler.name,
+                          self.kv_tuner.controller))
         for name, ctl in pairs:
             if ctl is None:
                 continue
@@ -282,11 +302,14 @@ class ServeEngine:
             "padded_rows": self.padded_rows,
             "in_flight": len(self.active),
             "bucket_steps": dict(sorted(self.bucket_steps.items())),
+            "phase_steps": dict(sorted(self.phase_steps.items())),
             "queue": self.queue.stats(),
             "serve": self.metrics.summary(),
         }
         if self.tuner is not None:
             out["buckets"] = self.tuner.status()
+        if self.kv_tuner is not None:
+            out["kv"] = self.kv_tuner.status()
         return out
 
 

@@ -36,6 +36,7 @@ class ServeMetrics:
         self._lock = threading.Lock()
         self._latencies: Deque[float] = deque(maxlen=window)
         self._queue_delays: Deque[float] = deque(maxlen=window)
+        self._ttfts: Deque[float] = deque(maxlen=window)
         self.completed = 0
         self.completed_tokens = 0
         self.goodput_tokens = 0      # lifetime tokens of in-SLO completions
@@ -53,6 +54,12 @@ class ServeMetrics:
             qd = completion.queue_delay_s
             if qd is not None:
                 self._queue_delays.append(qd)
+            if completion.first_token_t is not None:
+                # arrival -> first token: under phased execution this spans
+                # queueing plus the whole (chunked) prefill, the latency
+                # prefill/decode disaggregation trades against goodput.
+                self._ttfts.append(completion.first_token_t
+                                   - completion.arrival_t)
             self.completed += 1
             self.completed_tokens += completion.tokens
             if completion.within_slo:
@@ -84,9 +91,16 @@ class ServeMetrics:
         self.goodput.reset()
         return rate
 
+    def ttft_percentile(self, p: float) -> float:
+        """Time-to-first-token percentile in seconds (NaN when empty)."""
+        with self._lock:
+            xs = list(self._ttfts)
+        return nearest_rank(xs, p)
+
     def summary(self) -> dict:
         with self._lock:
             n = len(self._latencies)
+            n_ttft = len(self._ttfts)
             completed = self.completed
             tokens = self.completed_tokens
             good = self.goodput_tokens
@@ -106,4 +120,8 @@ class ServeMetrics:
             if n else None,
             "latency_p99_ms": round(self.percentile(99) * 1e3, 3)
             if n else None,
+            "ttft_p50_ms": round(self.ttft_percentile(50) * 1e3, 3)
+            if n_ttft else None,
+            "ttft_p95_ms": round(self.ttft_percentile(95) * 1e3, 3)
+            if n_ttft else None,
         }

@@ -47,12 +47,35 @@ class Request:
     first_token_t: float | None = None
     finish_t: float | None = None
     generated: int = 0               # decode tokens produced so far
+    prompt_consumed: int = 0         # prompt tokens prefilled so far (phased)
     shed: bool = False               # dropped by backpressure / drain timeout
 
     @property
     def remaining(self) -> int:
-        """Decode tokens still owed (the SJF scheduling key)."""
+        """Decode tokens still owed."""
         return max(0, self.max_new_tokens - self.generated)
+
+    @property
+    def remaining_prefill(self) -> int:
+        """Prompt tokens not yet prefilled.  Under phased execution the
+        executor advances ``prompt_consumed`` chunk by chunk; legacy
+        (non-phased) executors never touch it, in which case the whole
+        prompt counts as outstanding work until the first token."""
+        if self.generated > 0 and self.prompt_consumed == 0:
+            return 0                 # legacy executor: prompt already paid
+        return max(0, self.prompt_tokens - self.prompt_consumed)
+
+    @property
+    def prefilling(self) -> bool:
+        """Whether this request still has prompt tokens to consume."""
+        return self.prompt_consumed < self.prompt_tokens
+
+    @property
+    def remaining_work(self) -> int:
+        """Total step-cost estimate: remaining prefill + remaining decode
+        (the SJF scheduling key — chunked prefill makes prompt length part
+        of the true job cost)."""
+        return self.remaining_prefill + self.remaining
 
     @property
     def done(self) -> bool:

@@ -45,25 +45,30 @@ class FCFS(Scheduler):
 
 
 class ShortestJobFirst(Scheduler):
-    """Fewest remaining decode tokens first (prompt length breaks ties:
-    cheaper prefill goes first)."""
+    """Smallest remaining work first: remaining prefill + remaining decode
+    (``Request.remaining_work``).  Under chunked prefill the prompt is real
+    step cost, not a fixed admission toll, so a 2048-token prompt with a
+    4-token budget is a *long* job — ranking by decode budget alone would
+    wrongly jump it ahead of a 16-token prompt wanting 32 tokens."""
 
     name = "sjf"
 
     def key(self, now, slo_s=None):
-        return lambda r: (r.remaining, r.prompt_tokens,
+        return lambda r: (r.remaining_work,
                           r.arrival_t if r.arrival_t is not None else now,
                           r.rid)
 
 
 class DeadlineAware(Scheduler):
     """Earliest-deadline-first over each request's absolute deadline
-    (its own ``deadline_s``, else the engine-wide SLO)."""
+    (its own ``deadline_s``, else the engine-wide SLO).  Equal deadlines
+    break toward smaller remaining work — among requests equally urgent,
+    finishing the cheap one first loses less of the other's slack."""
 
     name = "deadline"
 
     def key(self, now, slo_s=None):
-        return lambda r: (r.deadline_t(slo_s),
+        return lambda r: (r.deadline_t(slo_s), r.remaining_work,
                           r.arrival_t if r.arrival_t is not None else now,
                           r.rid)
 

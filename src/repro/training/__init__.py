@@ -1,7 +1,8 @@
 from repro.training.steps import (SHARDING_PROFILES, cross_entropy,
                                   make_decode_builder, make_prefill_builder,
-                                  make_train_builder, run_options_from_spec)
+                                  make_serve_builder, make_train_builder,
+                                  phase_context_fn, run_options_from_spec)
 
 __all__ = ["SHARDING_PROFILES", "cross_entropy", "make_decode_builder",
-           "make_prefill_builder", "make_train_builder",
-           "run_options_from_spec"]
+           "make_prefill_builder", "make_serve_builder", "make_train_builder",
+           "phase_context_fn", "run_options_from_spec"]

@@ -29,8 +29,8 @@ from repro.models import transformer as model
 from repro.optim import OptConfig, apply_updates, init_opt_state
 
 __all__ = ["SHARDING_PROFILES", "make_train_builder", "make_prefill_builder",
-           "make_decode_builder", "run_options_from_spec", "cross_entropy",
-           "chunked_cross_entropy"]
+           "make_decode_builder", "make_serve_builder", "phase_context_fn",
+           "run_options_from_spec", "cross_entropy", "chunked_cross_entropy"]
 
 
 # -- sharding profiles (layout specialization points) ---------------------------
@@ -353,6 +353,72 @@ def make_decode_builder(
                 logits, new_cache = model.decode_step(
                     params, cache, tokens, pos, cfg, opts)
                 return logits, new_cache
+
+        return serve_step
+
+    return builder
+
+
+def phase_context_fn(args, kwargs) -> tuple[str, int]:
+    """Context key for the phase-disaggregated serve handler:
+    ``(phase, bucket)``.  The phase is read off the token rank at dispatch
+    time — ``(B, C)`` is a chunked-prefill step, ``(B,)`` a decode step —
+    so prefill and decode traffic land in *separate* specialization
+    contexts of the same handler, each with its own dispatch snapshot and
+    its own Controller search."""
+    tokens = args[2]
+    phase = "prefill" if getattr(tokens, "ndim", 1) == 2 else "decode"
+    return (phase, int(tokens.shape[0]))
+
+
+def make_serve_builder(
+    cfg: ModelConfig,
+    mesh=None,
+    *,
+    kernel_impl: str | None = None,
+    scan_layers: bool = True,
+    window: int | None = None,
+) -> Callable[[SpecCtx], Callable]:
+    """Handler builder for the phase-disaggregated
+    ``serve_step(params, cache, tokens, pos, n_new)``.
+
+    One registered handler serves both phases, branching at *trace* time
+    on the token rank: ``tokens (B,)`` runs one vector-pos decode step,
+    ``tokens (B, C)`` runs a chunked prefill
+    (:func:`repro.models.transformer.prefill_chunk`).  Register it with
+    ``context_fn=phase_context_fn`` and the two phases become separate
+    ``(phase, bucket)`` specialization contexts sharing one variant
+    cache — the Controller is free to discover that prefill and decode
+    want different configs.
+
+    ``pos (B,)`` is each row's write position (contiguous per-request
+    cache semantics — the paged KV manager's materialized lengths);
+    ``n_new (B,)`` the valid token count per row (prefill only; the
+    decode trace ignores it).  Returns ``(logits (B, V), new cache)``.
+    """
+
+    def builder(spec: SpecCtx) -> Callable:
+        opts = run_options_from_spec(spec, cfg, kernel_impl=kernel_impl,
+                                     scan_layers=scan_layers, window=window,
+                                     for_decode=True)
+        opts = RunOptions(**{**opts.__dict__, "decode_cache_dtype": spec.enum(
+            "cache_dtype", "bfloat16", ("bfloat16", "float32"),
+            guarded=False)})
+        rules = _rules_from_spec(spec)
+        cache_layout = spec.enum("cache_layout", "seq", ("seq", "batch"),
+                                 guarded=False)
+        if cache_layout == "seq":
+            rules = rules.replace(seq_kv="model")
+
+        def serve_step(params, cache, tokens, pos, n_new):
+            with mesh_context(mesh, rules):
+                params = _constrain_tree(params, model.param_axes(cfg))
+                cache = _constrain_tree(cache, model.cache_axes(cfg))
+                if tokens.ndim == 2:
+                    return model.prefill_chunk(params, cache, tokens, pos,
+                                               n_new, cfg, opts)
+                return model.decode_step(params, cache, tokens, pos, cfg,
+                                         opts)
 
         return serve_step
 
