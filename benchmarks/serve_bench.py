@@ -38,7 +38,16 @@ tracked by:
                              contiguous per-request slabs — recording the
                              per-phase settled configs (they differ: the
                              acceptance criterion), goodput vs the
-                             baseline, TTFT, and page-pool stats.
+                             baseline, TTFT, and page-pool stats,
+* ``fleet``                — fleet serving over subprocess replicas: one
+                             cold replica explores and publishes its
+                             settled winners to a shared SpecPlane (plus
+                             a shared portable variant cache), then N
+                             fresh replicas warm-start off the plane
+                             behind a ReplicaRouter — recording goodput
+                             scaling vs the single replica, recompiles
+                             on the warm replicas (must be zero), and
+                             the cold-vs-warm time-to-settled speedup.
 
 CLI:
     PYTHONPATH=src:. python -m benchmarks.serve_bench \
@@ -865,6 +874,181 @@ def run_disagg(d: int = 512, vocab: int = 32, bucket: int = 8,
     }
 
 
+def _fleet_schedule(n_requests: int, rate: float, seed: int,
+                    ) -> list[tuple[float, "Request"]]:
+    """Per-replica open-loop schedule: seeded exponential interarrivals at
+    ``rate`` with mixed decode budgets.  Callers derive ``seed`` via
+    ``substream_seed(root, replica_id)`` so every replica gets an
+    independent-looking but reproducible substream."""
+    import random as _random
+
+    from repro.serve import Request
+    rng = _random.Random(seed)
+    t = 0.0
+    out = []
+    for _ in range(n_requests):
+        t += rng.expovariate(rate)
+        out.append((t, Request(prompt_tokens=rng.randrange(8, 33),
+                               max_new_tokens=rng.randrange(2, 9))))
+    return out
+
+
+def run_fleet(replicas: int = 2, n_requests: int = 48, rate: float = 40.0,
+              seed: int = 0, router: str = "jsq", d: int = 256,
+              dwell: int = 12, slo_ms: float = 5000.0) -> dict:
+    """Fleet serving: router + shared spec plane, cross-replica warm starts.
+
+    Two phases over one shared plane directory and one shared *portable*
+    variant cache:
+
+    1. **cold** — replica ``0`` alone serves its substream of the arrival
+       schedule, pays the exploration (full sweep per context) and the
+       compiles, and publishes its settled winners to the plane.
+    2. **warm fleet** — ``replicas`` fresh workers (ids ``1..N``) poll the
+       plane before traffic, so every context is seeded and admits in
+       EXPLOIT; the shared portable cache turns activation into cache
+       hits.  A :class:`~repro.serve.fleet.ReplicaRouter` spreads the
+       union of per-replica substreams across them.
+
+    Acceptance: warm replicas recompile **nothing** (``xla_compiles == 0``
+    on every warm replica), fleet goodput beats the single cold replica,
+    and warm time-to-settled is >= 2x faster than cold.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve import OpenLoopSource, ServeMetrics, substream_seed
+    from repro.serve.fleet import ReplicaRouter
+    from repro.serve.fleet.worker import SubprocessReplica, worker_command
+
+    root = tempfile.mkdtemp(prefix="fleet_bench_")
+    plane_dir = os.path.join(root, "plane")
+    cache_dir = os.path.join(root, "cache")
+
+    def spawn(replica_id: str) -> SubprocessReplica:
+        cmd = worker_command(
+            "--profile", "synthetic", "--replica-id", replica_id,
+            "--plane-dir", plane_dir, "--plane-poll-s", "0.2",
+            "--cache-dir", cache_dir, "--d", str(d), "--dwell", str(dwell),
+            "--slo-ms", str(slo_ms), "--max-wall-s", "120")
+        return SubprocessReplica(cmd, name=replica_id)
+
+    def drive(sink, schedule) -> float:
+        """Pump one open-loop schedule to exhaustion; returns the wall
+        seconds of the traffic window (arrivals are exogenous — the pump
+        loop sleeps to the next due offset, never on service)."""
+        src = OpenLoopSource(sink, schedule)
+        t0 = time.perf_counter()
+        while not src.exhausted:
+            now = time.perf_counter()
+            src.pump(now)
+            due = src.next_due(time.perf_counter())
+            if due:
+                time.sleep(min(due, 0.02))
+        return time.perf_counter() - t0
+
+    def replica_section(stats: dict | None) -> dict:
+        if stats is None:
+            return {"alive": False}
+        comp = stats.get("compile", {})
+        return {
+            "alive": True,
+            "replica": stats.get("replica"),
+            "xla_compiles": comp.get("xla_compiles"),
+            "cache_hits": comp.get("cache_hits"),
+            "time_to_settled_s": stats.get("time_to_settled_s"),
+            "completed": stats.get("metrics", {}).get("completed"),
+            "settled": stats.get("settled"),
+        }
+
+    try:
+        # -- phase 1: one cold replica explores and publishes ----------------
+        cold = spawn("0")
+        if not cold.wait_ready(300.0):
+            cold.join(10.0)
+            raise RuntimeError("cold fleet replica failed to start")
+        t0 = time.perf_counter()
+        drive(cold, _fleet_schedule(n_requests, rate,
+                                    substream_seed(seed, "0")))
+        cold.close()
+        cold_stats = cold.join(300.0)
+        cold_wall = time.perf_counter() - t0
+        if cold_stats is None:
+            raise RuntimeError("cold fleet replica died without stats")
+
+        # -- phase 2: N fresh replicas warm-start off the plane --------------
+        warm = [spawn(str(i + 1)) for i in range(replicas)]
+        for r in warm:
+            if not r.wait_ready(300.0):
+                for w in warm:
+                    w.close()
+                    w.join(10.0)
+                raise RuntimeError(f"warm replica {r.name} failed to start")
+        front = ReplicaRouter(warm, policy=router)
+        union = []
+        for r in warm:
+            union.extend(_fleet_schedule(n_requests, rate,
+                                         substream_seed(seed, r.name)))
+        t0 = time.perf_counter()
+        drive(front, union)
+        for r in warm:
+            r.close()
+        warm_stats = [r.join(300.0) for r in warm]
+        fleet_wall = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    live = [s for s in warm_stats if s is not None]
+    merged = ServeMetrics.merge(*(s["metrics"] for s in live)) if live \
+        else ServeMetrics()
+
+    def goodput(metrics_state: dict, wall: float) -> float:
+        return metrics_state.get("goodput_tokens", 0) / max(wall, 1e-9)
+
+    single_good = goodput(cold_stats["metrics"], cold_wall)
+    fleet_good = goodput(merged.state(), fleet_wall)
+    cold_tts = cold_stats.get("time_to_settled_s")
+    warm_tts = [s.get("time_to_settled_s") for s in live]
+    worst_warm_tts = (max(t for t in warm_tts)
+                      if warm_tts and all(t is not None for t in warm_tts)
+                      else None)
+    speedup = (cold_tts / max(worst_warm_tts, 1e-9)
+               if cold_tts is not None and worst_warm_tts is not None
+               else None)
+    warm_recompiles = sum(int(s["compile"].get("xla_compiles", 0) or 0)
+                          for s in live)
+    return {
+        "replicas": replicas,
+        "router": router,
+        "requests_per_replica": n_requests,
+        "rate_per_replica": rate,
+        "single": {
+            "goodput_tok_per_s": round(single_good, 2),
+            "wall_s": round(cold_wall, 3),
+            "time_to_settled_s": cold_tts,
+            **replica_section(cold_stats),
+        },
+        "fleet": {
+            "goodput_tok_per_s": round(fleet_good, 2),
+            "wall_s": round(fleet_wall, 3),
+            "completed": merged.completed,
+            "goodput_tokens": merged.goodput_tokens,
+            "latency_p95_ms": round(merged.percentile(95) * 1e3, 3)
+            if merged.completed else None,
+            "per_replica": [replica_section(s) for s in warm_stats],
+        },
+        "goodput_scaling_x": (round(fleet_good / single_good, 3)
+                              if single_good > 0 else None),
+        "warm_recompiles": warm_recompiles,
+        "warm_recompiles_zero": (len(live) == len(warm_stats)
+                                 and warm_recompiles == 0),
+        "fleet_goodput_gt_single": fleet_good > single_good,
+        "time_to_settled_speedup_x": (round(speedup, 2)
+                                      if speedup is not None else None),
+        "warm_start_2x_faster": speedup is not None and speedup >= 2.0,
+    }
+
+
 def write_json(path: str, result: dict) -> None:
     with open(path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
@@ -877,11 +1061,13 @@ def run() -> list[Row]:
     result["mixed"] = run_mixed()
     result["open_loop"] = run_open_loop()
     result["disagg"] = run_disagg()
+    result["fleet"] = run_fleet()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
     mixed = result["mixed"]
     ol = result["open_loop"]
     dg = result["disagg"]
+    fl = result["fleet"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
             f"wall={result['wall_s']}s"),
@@ -909,10 +1095,17 @@ def run() -> list[Row]:
         Row("serve/disagg_distinct_configs",
             float(dg["distinct_phase_configs"]),
             f"ttft_p50={dg['disagg']['ttft_p50_ms']}ms"),
+        Row("serve/fleet_goodput_scaling",
+            fl["goodput_scaling_x"] or 0.0,
+            f"fleet={fl['fleet']['goodput_tok_per_s']} "
+            f"single={fl['single']['goodput_tok_per_s']} "
+            f"router={fl['router']}"),
+        Row("serve/fleet_warm_recompiles", float(fl["warm_recompiles"]),
+            f"settle_speedup={fl['time_to_settled_speedup_x']}x"),
     ]
 
 
-_SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg")
+_SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg", "fleet")
 
 
 def main() -> None:
@@ -931,6 +1124,11 @@ def main() -> None:
     ap.add_argument("--open-loop-phase-s", type=float, default=1.5,
                     help="seconds per rate-ramp phase of the open-loop "
                          "scenario (3 phases)")
+    ap.add_argument("--fleet-replicas", type=int, default=2,
+                    help="warm replica count for the fleet scenario")
+    ap.add_argument("--fleet-router", default="jsq",
+                    help="routing policy for the fleet scenario "
+                         "(round-robin | jsq | spill)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     result: dict = {}
@@ -953,6 +1151,9 @@ def main() -> None:
             phase_s=args.open_loop_phase_s)
     if args.scenario in ("all", "disagg"):
         result["disagg"] = run_disagg()
+    if args.scenario in ("all", "fleet"):
+        result["fleet"] = run_fleet(replicas=args.fleet_replicas,
+                                    router=args.fleet_router)
     write_json(args.out, result)
     print(json.dumps(result, indent=1, sort_keys=True))
 

@@ -1,4 +1,6 @@
-from repro.checkpoint.store import (CheckpointManager, restore_spec_state,
-                                    save_spec_state)
+from repro.checkpoint.store import (PLANE_RECORD_VERSION, CheckpointManager,
+                                    load_plane_record, restore_spec_state,
+                                    save_plane_record, save_spec_state)
 
-__all__ = ["CheckpointManager", "restore_spec_state", "save_spec_state"]
+__all__ = ["CheckpointManager", "restore_spec_state", "save_spec_state",
+           "PLANE_RECORD_VERSION", "load_plane_record", "save_plane_record"]

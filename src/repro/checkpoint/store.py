@@ -35,7 +35,8 @@ from repro.distributed.sharding import spec_for_axes
 logger = logging.getLogger("repro.checkpoint.store")
 
 __all__ = ["CheckpointManager", "save_spec_state", "restore_spec_state",
-           "SPEC_STATE_VERSION"]
+           "SPEC_STATE_VERSION", "PLANE_RECORD_VERSION",
+           "save_plane_record", "load_plane_record"]
 
 
 # -- specialization-state persistence ------------------------------------------
@@ -179,6 +180,76 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
                                "longer valid (%s: %s); keeping generic",
                                name, enc_key, type(e).__name__, e)
     return applied
+
+
+# -- fleet spec-plane records ---------------------------------------------------
+
+#: Spec-plane record format version (versioned like ``spec_state`` v2: an
+#: unknown version is refused, never misparsed).  One record = one
+#: replica's settled winner for one (handler, context):
+#: ``{"version": 1, "handler": name, "context": encoded_key,
+#:    "config": encoded_cfg, "goodput": float, "epoch": int,
+#:    "replica": str, "t": wall_clock_s}``.
+PLANE_RECORD_VERSION = 1
+
+
+def save_plane_record(path: str, *, handler: str, context: str, config: dict,
+                      goodput: float, epoch: int, replica: str,
+                      t: float) -> None:
+    """Atomically publish one spec-plane record (same mkstemp +
+    ``os.replace`` discipline as :func:`save_spec_state`: a subscriber
+    polling the shared directory never observes a torn write)."""
+    record = {
+        "version": PLANE_RECORD_VERSION,
+        "handler": str(handler),
+        "context": str(context),
+        "config": _encode_config(config),
+        "goodput": float(goodput),
+        "epoch": int(epoch),
+        "replica": str(replica),
+        "t": float(t),
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".tmp_plane_")
+    with os.fdopen(fd, "w") as f:
+        json.dump(record, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_plane_record(path: str) -> "dict | None":
+    """Read one spec-plane record; ``None`` for anything unusable
+    (truncated/corrupt JSON, unknown version, missing fields) — a bad
+    record on the shared plane must never take a subscriber down."""
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, ValueError) as e:
+        logger.warning("plane record %s unreadable (%s); ignoring", path, e)
+        return None
+    if not isinstance(record, dict) or \
+            record.get("version") != PLANE_RECORD_VERSION:
+        logger.warning("plane record %s has unsupported version %r; ignoring",
+                       path, record.get("version")
+                       if isinstance(record, dict) else None)
+        return None
+    try:
+        cfg = record["config"]
+        if not isinstance(cfg, dict):
+            raise TypeError(f"config is {type(cfg).__name__}, not a dict")
+        return {
+            "handler": str(record["handler"]),
+            "context": str(record["context"]),
+            "config": _decode_config(cfg),
+            "goodput": float(record["goodput"]),
+            "epoch": int(record["epoch"]),
+            "replica": str(record["replica"]),
+            "t": float(record["t"]),
+        }
+    except (KeyError, TypeError, ValueError) as e:
+        logger.warning("plane record %s malformed (%s: %s); ignoring",
+                       path, type(e).__name__, e)
+        return None
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:

@@ -32,9 +32,9 @@ from repro.core.runtime import (ContextView, DEFAULT_CONTEXT, Handler,
                                 IridescentRuntime, Variant,
                                 encode_context_key)
 from repro.core.policy import (ContextualBandit, CoordinateDescent,
-                               EpsilonGreedy, ExhaustiveSweep, Explorer,
-                               Phase, Policy, ScoreBoard, SuccessiveHalving,
-                               ThompsonSampling)
+                               CostAwareUCB, EpsilonGreedy, ExhaustiveSweep,
+                               Explorer, Phase, Policy, ScoreBoard,
+                               SuccessiveHalving, ThompsonSampling)
 from repro.core.controller import Controller
 from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
                                 StepTimer, ThroughputCounter,
@@ -48,9 +48,9 @@ __all__ = [
     "specialize_builder", "CompileService", "PRIORITY_ACTIVATE",
     "PRIORITY_SPECULATIVE", "VariantCache", "ContextView", "DEFAULT_CONTEXT",
     "Handler", "IridescentRuntime", "Variant", "encode_context_key",
-    "ContextualBandit", "Controller", "CoordinateDescent", "EpsilonGreedy",
-    "ExhaustiveSweep", "Explorer", "Phase", "Policy", "ScoreBoard",
-    "SuccessiveHalving", "ThompsonSampling",
+    "ContextualBandit", "Controller", "CoordinateDescent", "CostAwareUCB",
+    "EpsilonGreedy", "ExhaustiveSweep", "Explorer", "Phase", "Policy",
+    "ScoreBoard", "SuccessiveHalving", "ThompsonSampling",
     "AtomicCounter", "ChangeDetector", "EWMA",
     "StepTimer", "ThroughputCounter", "ThroughputWindow", "fastpath",
     "guards", "instrumentation",

@@ -367,6 +367,29 @@ class Controller:
             return dict(ctl.pending), (last if last is not None else -math.inf)
         return best, metric
 
+    def settled_winners(self) -> dict:
+        """Per-context ``(config, metric)`` for contexts settled in EXPLOIT
+        — the publish hook of the fleet spec plane
+        (:class:`~repro.serve.fleet.SpecPlane`): only settled winners are
+        shareable evidence, a mid-sweep candidate must never become another
+        replica's warm start.  The metric is the policy's best observation,
+        falling back to the context's latest windowed rate for warm-started
+        contexts whose policy never proposed (no observations yet)."""
+        out = {}
+        for key, ctl in self._ctls.items():
+            if ctl.phase is not Phase.EXPLOIT:
+                continue
+            cfg, metric = ctl.policy.best()
+            if ctl.pending is not None:
+                cfg = ctl.pending
+            if cfg is None:
+                continue
+            if metric == -math.inf:
+                last = ctl.view.window.last()
+                metric = last if last is not None else 0.0
+            out[key] = (dict(cfg), float(metric))
+        return out
+
     def best_configs(self) -> dict:
         """Per-context winners (pending exploit config, else policy best)."""
         out = {}

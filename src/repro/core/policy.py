@@ -16,6 +16,10 @@ building blocks.  These are the building blocks:
 * :class:`ThompsonSampling` — posterior-sampling bandit (Gaussian or Beta
   posterior per arm), deterministic under an explicit seed; same
   per-context protocol as the UCB1 bandit.
+* :class:`CostAwareUCB` — UCB1 whose acquisition score amortizes each
+  arm's *expected compile cost* over the expected dwell window; the
+  successor to the Controller's veto-only budget gate (cost shifts
+  ordering and allocation instead of hard-excluding candidates).
 * :class:`Explorer` — the legacy single-context lifecycle driver (handles
   instrument → explore → exploit and workload-change re-exploration, paper
   Fig 7/9).  New code should drive
@@ -38,7 +42,7 @@ logger = logging.getLogger("repro.core.policy")
 
 __all__ = ["Policy", "ScoreBoard", "ExhaustiveSweep", "CoordinateDescent",
            "EpsilonGreedy", "SuccessiveHalving", "ContextualBandit",
-           "ThompsonSampling", "Explorer", "Phase"]
+           "CostAwareUCB", "ThompsonSampling", "Explorer", "Phase"]
 
 
 class Policy:
@@ -511,6 +515,156 @@ class ThompsonSampling(Policy):
         """Per-arm pulls / running means (telemetry)."""
         return [{"config": dict(cfg), "pulls": self._pulls[k],
                  "mean": self._means[k]}
+                for cfg, k in zip(self.candidates, self._keys)]
+
+    def best(self) -> tuple[dict | None, float]:
+        pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
+                  if self._pulls[k] > 0]
+        if not pulled:
+            return None, -math.inf
+        # max() keeps the earliest candidate among equal means.
+        cfg, key = max(pulled, key=lambda ck: self._means[ck[1]])
+        return dict(cfg), self._means[key]
+
+
+class CostAwareUCB(Policy):
+    """UCB1 with compile-cost-aware acquisition (ROADMAP: successor to the
+    veto-only budget gate).
+
+    The Controller's ``budget`` gate *vetoes* candidates whose expected
+    compile cost exceeds a multiple of the dwell window — a candidate is
+    either affordable or invisible.  This policy folds the same telemetry
+    (:meth:`~repro.core.compile_service.CompileService.estimate_compile_s`
+    via ``cost_fn``) into the acquisition score instead:
+
+    ``score(arm) = ucb1(arm) - cost_weight * scale * compile_s / dwell_s``
+
+    where the penalty applies only while the arm is *unbuilt* (cost is paid
+    once; after the first pull — or when ``built_fn`` reports a cache hit —
+    the arm competes on pure UCB1).  ``scale`` normalizes the dimensionless
+    amortization ratio into metric units (the running mean |metric|, 1.0
+    until anything is observed).  Consequences:
+
+    * the initial pull-each-arm-once phase runs **cheapest-first** (stable
+      by candidate order among equal costs), so measurement starts sooner;
+    * when ``rounds`` is tighter than the arm count, the most expensive
+      arms are the ones left unmeasured — graceful budget allocation where
+      the veto gate was all-or-nothing;
+    * unknown costs (``cost_fn`` returning ``None``) mean no penalty, so
+      cold-telemetry behavior degrades to plain :class:`ContextualBandit`.
+
+    Same propose/observe/peek/best protocol and conventions as the other
+    bandits (``rounds=0`` = auto 4x arms; ties break to the earliest
+    candidate; out-of-set observations tolerated; deepcopy-able for the
+    Controller's policy-factory protocol).
+    """
+
+    def __init__(self, candidates: Sequence[Config], c: float = 1.0,
+                 rounds: int | None = 0,
+                 cost_fn: Callable[[Config], float | None] | None = None,
+                 dwell_s: float = 1.0, cost_weight: float = 1.0,
+                 built_fn: Callable[[Config], bool] | None = None):
+        self.candidates = [dict(cfg) for cfg in candidates]
+        if not self.candidates:
+            raise ValueError("CostAwareUCB needs at least one candidate")
+        self.c = float(c)
+        self.cost_fn = cost_fn
+        self.dwell_s = float(dwell_s)
+        if self.dwell_s <= 0:
+            raise ValueError(f"dwell_s must be positive, got {dwell_s!r}")
+        self.cost_weight = float(cost_weight)
+        self.built_fn = built_fn
+        #: rounds=0 (the default) means "auto": 4 pulls per arm.
+        self.rounds = (4 * len(self.candidates) if rounds == 0 else rounds)
+        self.reset()
+
+    def reset(self) -> None:
+        self._keys = [config_key(cfg) for cfg in self.candidates]
+        self._pulls: dict[tuple, int] = {k: 0 for k in self._keys}
+        self._means: dict[tuple, float] = {k: 0.0 for k in self._keys}
+        self._paid: set[tuple] = set()     # arms whose build cost is sunk
+        self._observations = 0
+        self._abs_sum = 0.0                # running sum of |metric| (scale)
+        self._proposed = 0
+        self._board = ScoreBoard()
+
+    # -- cost model ------------------------------------------------------------
+    def _scale(self) -> float:
+        """Metric magnitude that converts the dimensionless compile/dwell
+        ratio into metric units; 1.0 until anything is observed."""
+        if self._observations == 0 or self._abs_sum == 0.0:
+            return 1.0
+        return self._abs_sum / self._observations
+
+    def _penalty(self, cfg: Config, key: tuple) -> float:
+        """Amortized compile cost of the arm in metric units (0 once the
+        build is sunk — observed, or reported built by ``built_fn``)."""
+        if key in self._paid:
+            return 0.0
+        if self.built_fn is not None and self.built_fn(cfg):
+            return 0.0
+        est = self.cost_fn(cfg) if self.cost_fn is not None else None
+        if est is None or est <= 0.0:
+            return 0.0
+        return self.cost_weight * self._scale() * (est / self.dwell_s)
+
+    def _unseen(self) -> list[tuple[dict, tuple]]:
+        """Unpulled arms, cheapest amortized cost first (stable by candidate
+        order among ties) — exploration starts on the affordable arms."""
+        unseen = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
+                  if self._pulls[k] == 0]
+        return sorted(unseen, key=lambda ck: self._penalty(ck[0], ck[1]))
+
+    def _score(self, key: tuple) -> float:
+        n = self._pulls[key]
+        if n == 0:
+            return math.inf
+        total = max(1, self._observations)
+        ucb = self._means[key] + self.c * math.sqrt(2 * math.log(total) / n)
+        idx = self._keys.index(key)
+        return ucb - self._penalty(self.candidates[idx], key)
+
+    # -- protocol --------------------------------------------------------------
+    def propose(self) -> dict | None:
+        if self.rounds is not None and self._proposed >= self.rounds:
+            return None
+        self._proposed += 1
+        unseen = self._unseen()
+        if unseen:
+            return dict(unseen[0][0])
+        # max() keeps the earliest candidate among score ties.
+        best_key = max(self._keys, key=self._score)
+        idx = self._keys.index(best_key)
+        return dict(self.candidates[idx])
+
+    def peek(self, n: int = 1) -> list[dict]:
+        # Only the initial cheapest-first pull phase is metric-independent.
+        remaining = (None if self.rounds is None
+                     else max(0, self.rounds - self._proposed))
+        upcoming = [cfg for cfg, _ in self._unseen()]
+        if remaining is not None:
+            upcoming = upcoming[:remaining]
+        return [dict(cfg) for cfg in upcoming[:n]]
+
+    def observe(self, config: Config, metric: float) -> None:
+        key = config_key(config)
+        if key not in self._pulls:        # tolerate out-of-set observations
+            self._keys.append(key)
+            self.candidates.append(dict(config))
+            self._pulls[key] = 0
+            self._means[key] = 0.0
+        self._paid.add(key)               # an observed arm was built
+        self._pulls[key] += 1
+        self._observations += 1
+        self._abs_sum += abs(metric)
+        n = self._pulls[key]
+        self._means[key] += (metric - self._means[key]) / n
+        self._board.observe(config, metric)
+
+    def arm_stats(self) -> list[dict]:
+        """Per-arm pulls / means / current amortized penalty (telemetry)."""
+        return [{"config": dict(cfg), "pulls": self._pulls[k],
+                 "mean": self._means[k], "penalty": self._penalty(cfg, k)}
                 for cfg, k in zip(self.candidates, self._keys)]
 
     def best(self) -> tuple[dict | None, float]:

@@ -23,6 +23,21 @@ points ride the same machinery: the bucket-boundary scheme
 size vs. contiguous-per-request), both searched online against measured
 goodput (in-SLO tokens/s).
 
+**Fleet mode** (``--replicas N`` with N > 1): the process becomes a
+router front instead of an engine.  It spawns N subprocess workers
+(:mod:`repro.serve.fleet.worker` ``--profile lm`` — each the exact
+engine stack above), spreads the open-loop load across them with the
+``--router`` policy (round-robin / join-shortest-queue / deadline-aware
+spill), and reports fleet-merged metrics.  With ``--plane-dir`` the
+replicas share a specialization plane
+(:class:`~repro.serve.fleet.SpecPlane`): each publishes its settled
+per-context winners and seeds remotely-settled ones, so one replica's
+exploration warm-starts the rest — combine with a shared ``--cache-dir
+--portable-cache`` and the warm starts are also compile-free.
+``--plane-dir`` also works at ``--replicas 1``: the single engine polls
+the plane before serving and publishes its winners after draining
+(cross-*run* warm start through the plane instead of spec_state.json).
+
 Migration note: the old in-file ``DecodeExecutor`` (one shared ring
 cache per bucket — a load harness, not a sampling-correctness harness)
 moved to :mod:`repro.serve.executor` as the paged
@@ -32,13 +47,9 @@ moved to :mod:`repro.serve.executor` as the paged
 Every pre-engine flag (``--arch --batch --max-len --steps --dwell
 --compile-workers --prefetch --budget --cache-dir``) is preserved;
 ``--batch`` caps the largest batch bucket and ``--steps`` caps engine
-iterations.  New flags: ``--kv-page-size`` (initial page geometry) and
-``--prefill-chunk`` (prompt tokens consumed per prefill step).  With
-``--cache-dir`` the runtime persists AOT executables and the tuned
-per-context configurations (per-phase configs ride ``spec_state.json``
-as tuple keys; bucket scheme and KV plan ride their plan handlers) — a
-drained and restarted server resumes every context's tuned config with
-zero recompiles.
+iterations.  With ``--cache-dir`` the runtime persists AOT executables
+and the tuned per-context configurations — a drained and restarted
+server resumes every context's tuned config with zero recompiles.
 """
 from __future__ import annotations
 
@@ -47,23 +58,9 @@ import json
 import os
 import random
 import time
+from types import SimpleNamespace
 
-import jax
-
-from repro import configs
-from repro.checkpoint import restore_spec_state
-from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
-                        IridescentRuntime)
-from repro.models import transformer as model
-from repro.models.transformer import RunOptions
-from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
-                         KVTuner, OpenLoopSource, PagedKV, PhasedExecutor,
-                         Request, ServeEngine, ServeMetrics,
-                         bucket_plan_builder, kv_plan_builder,
-                         make_scheduler, pseudo_poisson_times)
-from repro.serve.batcher import BUCKET_POINT
-from repro.serve.kv import KV_LAYOUT_POINT, KV_PAGE_POINT
-from repro.training import make_serve_builder, phase_context_fn
+from repro.serve import Request, pseudo_poisson_times
 
 KV_PAGE_SIZES = (8, 16, 64)
 
@@ -80,8 +77,24 @@ def synthetic_workload(n: int, rate: float, seed: int = 0,
             for t in times[:n]]
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+#: (flag, args attribute) for every engine flag — the fleet front
+#: forwards these verbatim to its ``--profile lm`` workers.
+_ENGINE_FLAGS = (
+    ("--arch", "arch"), ("--batch", "batch"), ("--max-len", "max_len"),
+    ("--steps", "steps"), ("--dwell", "dwell"),
+    ("--compile-workers", "compile_workers"), ("--prefetch", "prefetch"),
+    ("--budget", "budget"), ("--cache-dir", "cache_dir"),
+    ("--kv-page-size", "kv_page_size"), ("--prefill-chunk", "prefill_chunk"),
+    ("--requests", "requests"), ("--rate", "rate"), ("--slo-ms", "slo_ms"),
+    ("--queue-depth", "queue_depth"), ("--shed-policy", "shed_policy"),
+    ("--scheduler", "scheduler"), ("--bucket-dwell", "bucket_dwell"),
+    ("--kv-dwell", "kv_dwell"), ("--seed", "seed"),
+)
+
+
+def add_engine_args(ap: argparse.ArgumentParser) -> None:
+    """The single-engine flag set, shared between this driver and the
+    fleet worker (:mod:`repro.serve.fleet.worker` ``--profile lm``)."""
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--batch", type=int, default=8,
                     help="batch cap = largest batch-shape bucket")
@@ -100,6 +113,11 @@ def main() -> None:
     ap.add_argument("--cache-dir", default=None,
                     help="persist AOT executables + tuned config here; a "
                          "warm restart then performs zero recompiles")
+    ap.add_argument("--portable-cache", action="store_true",
+                    help="drop the device count from the variant-cache "
+                         "fingerprint so AOT artifacts are shareable "
+                         "across fleet replicas (same platform/device "
+                         "kind required)")
     ap.add_argument("--kv-page-size", type=int, default=16,
                     help="initial KV page size (tokens per page); the "
                          "KVTuner searches the geometry menu online")
@@ -107,7 +125,8 @@ def main() -> None:
                     help="prompt tokens consumed per chunked-prefill step "
                          "(long prompts interleave with decode steps)")
     ap.add_argument("--requests", type=int, default=64,
-                    help="open-loop workload size")
+                    help="open-loop workload size (per replica in fleet "
+                         "mode: each replica's substream offers this many)")
     ap.add_argument("--rate", type=float, default=40.0,
                     help="mean arrival rate (req/s) of the open-loop load")
     ap.add_argument("--slo-ms", type=float, default=2000.0,
@@ -123,11 +142,34 @@ def main() -> None:
     ap.add_argument("--kv-dwell", type=int, default=25,
                     help="engine steps per KV-geometry candidate")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+
+
+def build_engine(args) -> SimpleNamespace:
+    """Build the full single-replica serving stack from parsed engine
+    args; returns the runtime, engine, and every tuned part (the fleet
+    worker runs exactly this stack per replica)."""
+    import jax
+
+    from repro import configs
+    from repro.checkpoint import restore_spec_state
+    from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
+                            IridescentRuntime, VariantCache)
+    from repro.models import transformer as model
+    from repro.models.transformer import RunOptions
+    from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
+                             KVTuner, PagedKV, PhasedExecutor, ServeEngine,
+                             ServeMetrics, bucket_plan_builder,
+                             kv_plan_builder, make_scheduler)
+    from repro.serve.batcher import BUCKET_POINT
+    from repro.serve.kv import KV_LAYOUT_POINT, KV_PAGE_POINT
+    from repro.training import make_serve_builder, phase_context_fn
 
     cfg = configs.get_reduced(args.arch).replace(compute_dtype="float32")
-    variant_cache = (os.path.join(args.cache_dir, "variants")
-                     if args.cache_dir else None)
+    variant_cache = None
+    if args.cache_dir:
+        variant_cache = VariantCache(
+            os.path.join(args.cache_dir, "variants"),
+            portable=getattr(args, "portable_cache", False))
     rt = IridescentRuntime(async_compile=True,
                            max_compile_workers=args.compile_workers,
                            variant_cache=variant_cache)
@@ -153,15 +195,14 @@ def main() -> None:
                        if args.cache_dir else None)
     initial_scheme = None
     initial_plan = None
+    restored = False
     if spec_state_path and restore_spec_state(spec_state_path, rt, wait=True):
+        restored = True
         initial_scheme = plan_handler.active_config().get(BUCKET_POINT)
         kv_cfg = kv_plan_handler.active_config()
         if KV_LAYOUT_POINT in kv_cfg:
             initial_plan = (kv_cfg[KV_LAYOUT_POINT],
                             kv_cfg.get(KV_PAGE_POINT, args.kv_page_size))
-        print(f"restored spec state: bucket scheme={initial_scheme}, "
-              f"kv plan={initial_plan}, "
-              f"seeded contexts={list(handler._seeded)}")
 
     params = model.init_params(jax.random.PRNGKey(0), cfg)
     run_opts = RunOptions(decode_cache_dtype="float32")
@@ -196,6 +237,29 @@ def main() -> None:
         executor=executor,
         queue=AdmissionQueue(depth=args.queue_depth, policy=args.shed_policy),
         tuner=tuner, kv_tuner=kv_tuner, metrics=metrics, slo_s=slo_s)
+    return SimpleNamespace(
+        rt=rt, engine=engine, handler=handler, controller=controller,
+        batcher=batcher, tuner=tuner, kv_tuner=kv_tuner, kv=kv,
+        metrics=metrics, restored=restored, initial_scheme=initial_scheme,
+        initial_plan=initial_plan)
+
+
+def _run_single(args) -> None:
+    from repro.serve import OpenLoopSource
+    from repro.serve.fleet import SpecPlane
+
+    built = build_engine(args)
+    rt, engine = built.rt, built.engine
+    if built.restored:
+        print(f"restored spec state: bucket scheme={built.initial_scheme}, "
+              f"kv plan={built.initial_plan}, "
+              f"seeded contexts={list(built.handler._seeded)}")
+    plane = (SpecPlane(args.plane_dir, replica=args.replica_id)
+             if args.plane_dir else None)
+    if plane is not None and plane.poll(rt):
+        # Warm start off the fleet plane: remotely settled (phase, bucket)
+        # contexts begin in EXPLOIT when their traffic materializes.
+        print(f"plane: seeded contexts={list(built.handler._seeded)}")
 
     schedule = synthetic_workload(args.requests, args.rate, seed=args.seed)
     source = OpenLoopSource(engine.queue, schedule)
@@ -214,18 +278,110 @@ def main() -> None:
           f"{served['latency_p95_ms']} / {served['latency_p99_ms']}")
     print(f"bucket steps: {stats['bucket_steps']}  "
           f"phase steps: {stats['phase_steps']}  "
-          f"scheme: {tuner.active_scheme()} "
-          f"(boundaries {batcher.schemes[tuner.active_scheme()]})")
-    print(f"kv: plan={kv_tuner.active_plan()} pools="
-          f"{json.dumps(kv.stats()['pools'])}")
+          f"scheme: {built.tuner.active_scheme()} "
+          f"(boundaries {built.batcher.schemes[built.tuner.active_scheme()]})")
+    print(f"kv: plan={built.kv_tuner.active_plan()} pools="
+          f"{json.dumps(built.kv.stats()['pools'])}")
     best_cfgs = {str(k): ({kk: repr(vv) for kk, vv in cfg.items()}
                           if cfg is not None else None)
-                 for k, cfg in controller.best_configs().items()}
+                 for k, cfg in built.controller.best_configs().items()}
     print(f"per-context configs: {json.dumps(best_cfgs)}")
     print(f"compile stats: {json.dumps(rt.compile_stats())}")
+    if plane is not None:
+        n = plane.publish_controller("serve_step", built.controller)
+        print(f"plane: published {n} settled winners")
     # shutdown drains (already drained), persists spec state once settled,
     # and stops the compile workers.
     engine.shutdown(state_dir=args.cache_dir)
+
+
+def _run_fleet(args) -> None:
+    """Router front: N subprocess lm workers behind a routing policy."""
+    from repro.serve import OpenLoopSource, ServeMetrics, substream_seed
+    from repro.serve.fleet import ReplicaRouter
+    from repro.serve.fleet.worker import (SubprocessReplica, worker_command,
+                                          worker_env)
+
+    passthrough: list[str] = []
+    for flag, attr in _ENGINE_FLAGS:
+        v = getattr(args, attr)
+        if v is not None:
+            passthrough += [flag, str(v)]
+    if args.portable_cache:
+        passthrough.append("--portable-cache")
+    env = worker_env()
+    replicas = []
+    for i in range(args.replicas):
+        cmd = worker_command("--profile", "lm", "--replica-id", str(i),
+                             *passthrough)
+        if args.plane_dir:
+            cmd += ["--plane-dir", args.plane_dir,
+                    "--plane-poll-s", str(args.plane_poll_s)]
+        replicas.append(SubprocessReplica(cmd, name=str(i), env=env))
+    print(f"fleet: spawned {args.replicas} lm workers "
+          f"(router={args.router}, plane={args.plane_dir or 'off'})")
+    for r in replicas:
+        if not r.wait_ready(300.0):
+            for other in replicas:
+                other.close()
+            raise RuntimeError(f"replica {r.name} failed to start")
+
+    # Per-replica substreams of the root seed: N times the single-replica
+    # offered load without N byte-identical arrival processes.
+    schedule: list = []
+    for i in range(args.replicas):
+        schedule += synthetic_workload(args.requests, args.rate,
+                                       seed=substream_seed(args.seed, i))
+    router = ReplicaRouter(replicas, policy=args.router)
+    source = OpenLoopSource(router, schedule)
+    while not source.exhausted:
+        source.pump(time.perf_counter())
+        delay = source.next_due(time.perf_counter())
+        if delay:
+            time.sleep(min(delay, 0.02))
+    for r in replicas:
+        r.close()
+    stats = [r.join(300.0) for r in replicas]
+    alive = [s for s in stats if s is not None]
+    print(f"router: {json.dumps(router.stats())}")
+    if not alive:
+        raise RuntimeError("no replica returned stats")
+    merged = ServeMetrics.merge(*(s["metrics"] for s in alive)).summary()
+    wall = max(s["wall_s"] for s in alive)
+    print(f"fleet served {merged['completed']} requests / "
+          f"{merged['completed_tokens']} tokens across {len(alive)} "
+          f"replicas in {wall:.2f}s "
+          f"({merged['goodput_tokens'] / wall:.1f} goodput tok/s; "
+          f"met={merged['slo_met']} missed={merged['slo_missed']})")
+    print(f"fleet p50/p95/p99 latency ms: {merged['latency_p50_ms']} / "
+          f"{merged['latency_p95_ms']} / {merged['latency_p99_ms']}")
+    for s in alive:
+        print(f"replica {s['replica']}: steps={s['steps']} "
+              f"time_to_settled_s={s['time_to_settled_s']} "
+              f"compile={json.dumps(s['compile'])}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    add_engine_args(ap)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N > 1 turns this process into a router front "
+                         "over N subprocess engine replicas")
+    ap.add_argument("--router", default="jsq",
+                    choices=("round-robin", "jsq", "spill"),
+                    help="fleet routing policy")
+    ap.add_argument("--plane-dir", default=None,
+                    help="shared SpecPlane directory: publish settled "
+                         "winners, seed remotely-settled ones")
+    ap.add_argument("--plane-poll-s", type=float, default=0.5,
+                    help="plane subscribe/publish interval")
+    ap.add_argument("--replica-id", default="0",
+                    help="this replica's plane identity (single mode)")
+    args = ap.parse_args()
+    if args.replicas > 1:
+        _run_fleet(args)
+    else:
+        _run_single(args)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ and ``benchmarks/serve_bench.py`` for the open-loop evaluation scenario.
 """
 from repro.serve.request import Completion, Request, next_request_id
 from repro.serve.queue import (AdmissionQueue, OpenLoopSource,
-                               pseudo_poisson_times)
+                               pseudo_poisson_times, substream_seed)
 from repro.serve.scheduler import (SCHEDULERS, DeadlineAware, FCFS,
                                    Scheduler, ShortestJobFirst,
                                    make_scheduler)
@@ -37,6 +37,7 @@ from repro.serve.engine import BatchExecutor, ServeEngine
 __all__ = [
     "Completion", "Request", "next_request_id",
     "AdmissionQueue", "OpenLoopSource", "pseudo_poisson_times",
+    "substream_seed",
     "SCHEDULERS", "DeadlineAware", "FCFS", "Scheduler", "ShortestJobFirst",
     "make_scheduler", "ServeMetrics",
     "BucketTuner", "ContinuousBatcher", "PackedBatch",

@@ -1,0 +1,42 @@
+"""Fleet-scale serving: replica router + shared specialization plane.
+
+One :class:`~repro.serve.engine.ServeEngine` per process is the
+throughput ceiling, and every new replica would re-pay the full
+exploration cost its Controller spends before settling.  This package
+scales both out:
+
+* :class:`ReplicaRouter` (:mod:`repro.serve.fleet.router`) — an
+  open-loop front that spreads one arrival schedule across N replicas
+  with pluggable policies (round-robin, join-shortest-queue by reported
+  depth, deadline-aware spill).  Replicas are in-process
+  (:class:`LocalReplica`) or subprocess workers
+  (:class:`~repro.serve.fleet.worker.SubprocessReplica` driving
+  :mod:`repro.serve.fleet.worker`).
+* :class:`SpecPlane` (:mod:`repro.serve.fleet.plane`) — shared
+  specialization state: replicas publish per-context settled winners
+  (atomic one-record files; freshest-wins conflict resolution with a
+  goodput tiebreak) and subscribe on a poll interval, seeding remote
+  winners through ``handler.seed_spec_state`` so a remotely-tuned
+  context starts in EXPLOIT.  With a shared *portable* variant cache
+  the warm start is also compile-free: replicas 2..N skip both the
+  search and the compiles replica 1 paid for.
+
+``launch/serve.py --replicas N`` runs the LM serving stack this way;
+``benchmarks/serve_bench.py --scenario fleet`` measures the scaling and
+the warm-start effect (zero recompiles, time-to-settled speedup).
+
+Note :class:`~repro.serve.fleet.worker.SubprocessReplica` is imported
+from :mod:`repro.serve.fleet.worker` directly — this package root stays
+import-light for the worker subprocesses themselves.
+"""
+from repro.serve.fleet.plane import SpecPlane
+from repro.serve.fleet.router import (ROUTING_POLICIES, DeadlineSpill,
+                                      JoinShortestQueue, LocalReplica,
+                                      ReplicaRouter, RoundRobin,
+                                      make_routing_policy)
+
+__all__ = [
+    "SpecPlane",
+    "ReplicaRouter", "LocalReplica", "RoundRobin", "JoinShortestQueue",
+    "DeadlineSpill", "ROUTING_POLICIES", "make_routing_policy",
+]

@@ -1,0 +1,188 @@
+"""SpecPlane: shared specialization state across serving replicas.
+
+A fleet of replicas each running its own :class:`~repro.core.controller.
+Controller` would re-pay the full exploration cost N times — the plane
+amortizes it.  Replicas **publish** per-context settled winners (context
+key, config, goodput evidence, epoch) as one-record files in a shared
+directory; every record is written atomically
+(:func:`~repro.checkpoint.store.save_plane_record`: mkstemp +
+``os.replace``), so a subscriber polling mid-publish never reads a torn
+record.  Replicas **subscribe** by polling the directory: conflicting
+records for the same (handler, context) resolve freshest-wins (highest
+epoch — a Lamport-style counter each publisher advances past the highest
+epoch it has seen for that context), tie-broken by goodput evidence and
+finally by replica id, so every subscriber converges on the same winner.
+
+A resolved winner is applied through the existing warm-start path:
+``handler.seed_spec_state(encoded_key, config)``.  The Controller's
+``_admit`` then sees a seeded config and starts the context directly in
+EXPLOIT — and when the fleet also shares a portable variant cache
+(``VariantCache(portable=True)``), activating the seeded config is a
+cache hit, not a compile: replicas 2..N warm-start compile-free off
+replica 1's exploration.
+"""
+from __future__ import annotations
+
+import hashlib
+import logging
+import os
+import time
+from typing import Any, Callable, Mapping
+
+from repro.checkpoint.store import load_plane_record, save_plane_record
+from repro.core.runtime import encode_context_key
+
+logger = logging.getLogger("repro.serve.fleet.plane")
+
+__all__ = ["SpecPlane"]
+
+
+def _slug(handler: str, enc_context: str) -> str:
+    """Filesystem-safe digest of (handler, encoded context)."""
+    h = hashlib.sha256(f"{handler}\x00{enc_context}".encode()).hexdigest()
+    return h[:16]
+
+
+class SpecPlane:
+    """One replica's handle on the shared plane directory.
+
+    ``publish`` writes this replica's settled winner for one (handler,
+    context); ``poll`` scans every record on the plane, resolves
+    conflicts, and (given a runtime) seeds the winners onto the local
+    handlers.  Both sides are crash-tolerant by construction: corrupt,
+    truncated, or unknown-version records are ignored
+    (:func:`~repro.checkpoint.store.load_plane_record` returns ``None``),
+    never fatal.
+    """
+
+    def __init__(self, directory: str, replica: str,
+                 clock: Callable[[], float] = time.time):
+        self.directory = directory
+        self.replica = str(replica)
+        self.clock = clock
+        os.makedirs(directory, exist_ok=True)
+        #: highest epoch seen per (handler, encoded context) — publishers
+        #: advance past it so a re-publish supersedes every record seen
+        self._epochs: dict[tuple[str, str], int] = {}
+        #: resolution key of the record last seeded per (handler, context)
+        #: (idempotence: the same winner is never re-seeded)
+        self._applied: dict[tuple[str, str], tuple] = {}
+        #: config last published per (handler, context) — an unchanged
+        #: winner is not re-published (no epoch churn on every interval)
+        self._published: dict[tuple[str, str], tuple] = {}
+
+    # -- publishing ------------------------------------------------------------
+    def _path(self, handler: str, enc: str) -> str:
+        # One file per (handler, context, replica): a replica's re-publish
+        # atomically replaces its own record instead of accumulating.
+        return os.path.join(self.directory,
+                            f"{_slug(handler, enc)}__{self.replica}.json")
+
+    def publish(self, handler: str, context: Any, config: Mapping,
+                goodput: float, *, epoch: int | None = None,
+                t: float | None = None) -> str:
+        """Publish this replica's settled winner for one context.
+
+        ``context`` is the raw context key (it is canonicalized via
+        :func:`~repro.core.runtime.encode_context_key`).  ``epoch``
+        defaults to one past the highest epoch this replica has seen for
+        the pair — publish-after-poll therefore always supersedes.
+        Returns the record path.
+        """
+        enc = encode_context_key(context)
+        pair = (handler, enc)
+        if epoch is None:
+            epoch = self._epochs.get(pair, 0) + 1
+        self._epochs[pair] = max(self._epochs.get(pair, 0), epoch)
+        path = self._path(handler, enc)
+        save_plane_record(path, handler=handler, context=enc,
+                          config=dict(config), goodput=goodput, epoch=epoch,
+                          replica=self.replica,
+                          t=self.clock() if t is None else t)
+        return path
+
+    def publish_controller(self, handler_name: str, controller,
+                           goodput_fn: Callable[[], float] | None = None
+                           ) -> int:
+        """Publish every settled winner of a Controller
+        (:meth:`~repro.core.controller.Controller.settled_winners`); the
+        evidence is the controller's per-context metric unless
+        ``goodput_fn`` supplies an engine-level goodput reading.  Returns
+        the number of records written."""
+        from repro.core.points import config_key
+        n = 0
+        for key, (cfg, metric) in controller.settled_winners().items():
+            pair = (handler_name, encode_context_key(key))
+            if self._published.get(pair) == config_key(cfg):
+                continue                  # unchanged winner: no epoch churn
+            evidence = goodput_fn() if goodput_fn is not None else metric
+            self.publish(handler_name, key, cfg, evidence)
+            self._published[pair] = config_key(cfg)
+            n += 1
+        return n
+
+    # -- subscribing -----------------------------------------------------------
+    @staticmethod
+    def _rank(record: Mapping) -> tuple:
+        # Freshest-wins: epoch is the logical clock; goodput evidence
+        # breaks epoch ties (the better-performing winner spreads);
+        # replica id makes full ties deterministic fleet-wide.
+        return (record["epoch"], record["goodput"], record["replica"])
+
+    def resolve(self) -> dict[tuple[str, str], dict]:
+        """Scan the plane and return the winning record per
+        (handler, encoded context key)."""
+        winners: dict[tuple[str, str], dict] = {}
+        try:
+            names = sorted(os.listdir(self.directory))
+        except OSError as e:
+            logger.warning("spec plane %s unreadable (%s)",
+                           self.directory, e)
+            return winners
+        for name in names:
+            if not name.endswith(".json"):
+                continue                  # in-flight temp files etc.
+            record = load_plane_record(os.path.join(self.directory, name))
+            if record is None:
+                continue                  # corrupt/unknown: ignored
+            pair = (record["handler"], record["context"])
+            self._epochs[pair] = max(self._epochs.get(pair, 0),
+                                     record["epoch"])
+            cur = winners.get(pair)
+            if cur is None or self._rank(record) > self._rank(cur):
+                winners[pair] = record
+        return winners
+
+    def poll(self, runtime=None) -> dict[tuple[str, str], dict]:
+        """Resolve the plane; with a runtime, seed every remote winner
+        onto its local handler via ``handler.seed_spec_state`` (the
+        Controller warm-starts the context in EXPLOIT when its traffic
+        materializes).  Already-applied winners and this replica's own
+        records are skipped.  Returns the resolved winners."""
+        winners = self.resolve()
+        if runtime is None:
+            return winners
+        for (handler_name, enc), record in winners.items():
+            if record["replica"] == self.replica:
+                continue                  # our own state: already live
+            if self._applied.get((handler_name, enc)) == self._rank(record):
+                continue
+            handler = runtime.handlers.get(handler_name)
+            if handler is None:
+                continue
+            # Best-effort like every restore path: a stale config from a
+            # replica running older code must not take this one down.
+            try:
+                handler.seed_spec_state(enc, dict(record["config"]))
+            except Exception as e:
+                logger.warning(
+                    "plane seed for %s/%s from %s invalid (%s: %s); ignored",
+                    handler_name, enc, record["replica"],
+                    type(e).__name__, e)
+                continue
+            self._applied[(handler_name, enc)] = self._rank(record)
+            logger.info("plane: seeded %s/%s from replica %s (epoch %d, "
+                        "goodput %.3f)", handler_name, enc,
+                        record["replica"], record["epoch"],
+                        record["goodput"])
+        return winners

@@ -18,12 +18,16 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque
+from typing import Callable, Deque, Mapping
 
 from repro.core.metrics import ThroughputCounter, nearest_rank
 from repro.serve.request import Completion
 
 __all__ = ["ServeMetrics"]
+
+#: Counter fields carried by ``state()`` and summed by ``merge()``.
+_COUNTERS = ("completed", "completed_tokens", "goodput_tokens",
+             "slo_met", "slo_missed", "shed")
 
 
 class ServeMetrics:
@@ -96,6 +100,60 @@ class ServeMetrics:
         with self._lock:
             xs = list(self._ttfts)
         return nearest_rank(xs, p)
+
+    # -- fleet aggregation -----------------------------------------------------
+    def state(self) -> dict:
+        """Portable snapshot: sample windows plus lifetime counters — the
+        wire format a fleet replica ships to the router front so
+        :meth:`merge` can aggregate across processes."""
+        with self._lock:
+            return {
+                "slo_s": self.slo_s,
+                "latencies": list(self._latencies),
+                "queue_delays": list(self._queue_delays),
+                "ttfts": list(self._ttfts),
+                **{f: getattr(self, f) for f in _COUNTERS},
+            }
+
+    @classmethod
+    def from_state(cls, state: Mapping, window: int | None = None,
+                   clock: Callable[[], float] = time.perf_counter
+                   ) -> "ServeMetrics":
+        """Rebuild a :class:`ServeMetrics` from a :meth:`state` snapshot
+        (rate counters restart — only samples and counters travel)."""
+        lat = list(state.get("latencies", ()))
+        if window is None:
+            window = max(2048, len(lat))
+        m = cls(slo_s=state.get("slo_s"), window=window, clock=clock)
+        m._latencies.extend(lat)
+        m._queue_delays.extend(state.get("queue_delays", ()))
+        m._ttfts.extend(state.get("ttfts", ()))
+        for f in _COUNTERS:
+            setattr(m, f, int(state.get(f, 0)))
+        return m
+
+    @classmethod
+    def merge(cls, *others: "ServeMetrics | Mapping") -> "ServeMetrics":
+        """Fleet-level aggregate of per-replica metrics: counters are
+        summed and percentiles are nearest-rank over the *combined* sample
+        windows (not an average of per-replica percentiles, which has no
+        rank semantics).  Accepts live :class:`ServeMetrics` instances or
+        :meth:`state` snapshots interchangeably; ``slo_s`` survives only
+        when every input agrees on it."""
+        states = [m.state() if isinstance(m, ServeMetrics) else dict(m)
+                  for m in others]
+        slos = {s.get("slo_s") for s in states}
+        merged: dict = {
+            "slo_s": slos.pop() if len(slos) == 1 else None,
+            "latencies": [], "queue_delays": [], "ttfts": [],
+            **{f: 0 for f in _COUNTERS},
+        }
+        for s in states:
+            for samples in ("latencies", "queue_delays", "ttfts"):
+                merged[samples].extend(s.get(samples, ()))
+            for f in _COUNTERS:
+                merged[f] += int(s.get(f, 0))
+        return cls.from_state(merged)
 
     def summary(self) -> dict:
         with self._lock:

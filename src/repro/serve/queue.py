@@ -19,6 +19,7 @@ the serve benchmark replays identically for every engine configuration.
 from __future__ import annotations
 
 import collections
+import hashlib
 import logging
 import random
 import threading
@@ -29,7 +30,8 @@ from repro.serve.request import Request
 
 logger = logging.getLogger("repro.serve.queue")
 
-__all__ = ["AdmissionQueue", "OpenLoopSource", "pseudo_poisson_times"]
+__all__ = ["AdmissionQueue", "OpenLoopSource", "pseudo_poisson_times",
+           "substream_seed"]
 
 #: Backpressure policies: refuse the newcomer, or drop the oldest waiter.
 _POLICIES = ("reject", "shed-oldest")
@@ -185,12 +187,32 @@ def pseudo_poisson_times(phases: Sequence[tuple[float, float]],
     return out
 
 
+def substream_seed(root_seed: int, replica_id: int | str) -> int:
+    """Per-replica seed substream derived from one root seed.
+
+    A fleet of N replicas fed from the same ``--seed`` must not replay
+    byte-identical arrival schedules — that would synchronize every
+    replica's bursts and make "N replicas" indistinguishable from one
+    replica at N× rate.  Hashing ``(root_seed, replica_id)`` gives each
+    replica an independent-looking but fully deterministic substream:
+    the same pair always yields the same seed, different replicas yield
+    different seeds, and no two substreams share RNG state.
+    """
+    digest = hashlib.sha256(f"{root_seed}:{replica_id}".encode()).digest()
+    return int.from_bytes(digest[:8], "big")
+
+
 class OpenLoopSource:
     """Replays a pre-built ``(arrival_offset_s, Request)`` schedule against
     the wall clock: each ``pump(now)`` submits every request whose offset
     has elapsed, whether or not the queue kept up (that is what makes the
     load open-loop).  Refused submits are the queue's problem — the source
-    never retries."""
+    never retries.
+
+    ``queue`` is anything with ``submit(request) -> bool`` — an
+    :class:`AdmissionQueue`, or a fleet front like
+    :class:`~repro.serve.fleet.ReplicaRouter` that spreads the same
+    open-loop schedule across replicas."""
 
     def __init__(self, queue: AdmissionQueue,
                  schedule: Iterable[tuple[float, Request]],

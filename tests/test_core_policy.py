@@ -5,8 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ChangeDetector, ContextualBandit, CoordinateDescent,
-                        EpsilonGreedy, ExhaustiveSweep, ScoreBoard,
-                        SuccessiveHalving)
+                        CostAwareUCB, EpsilonGreedy, ExhaustiveSweep,
+                        ScoreBoard, SuccessiveHalving)
 from repro.core.points import EnumPoint, SpecSpace
 
 
@@ -183,6 +183,7 @@ def test_scoreboard_refresh_keeps_insertion_order():
     lambda c: EpsilonGreedy(c, eps=0.0, seed=0),
     lambda c: SuccessiveHalving(c),
     lambda c: ContextualBandit(c, rounds=len(c)),
+    lambda c: CostAwareUCB(c, rounds=len(c)),
 ])
 def test_best_tie_break_deterministic_across_policies(make):
     """All shipped policies break best() ties to the earliest-observed
@@ -277,3 +278,118 @@ def test_thompson_invalid_args():
         ThompsonSampling([])
     with pytest.raises(ValueError):
         ThompsonSampling([{"x": 1}], posterior="dirichlet")
+
+
+# -- cost-aware UCB -------------------------------------------------------------
+
+def _costs(table):
+    return lambda cfg: table.get(cfg["x"])
+
+
+def test_cost_aware_finds_argmax():
+    cands = [{"x": i} for i in range(4)]
+    pol = CostAwareUCB(cands, rounds=32,
+                       cost_fn=_costs({0: 0.5, 1: 0.5, 2: 0.5, 3: 0.5}))
+    best, metric = _drive(pol, lambda c: float(c["x"]))
+    assert best == {"x": 3} and metric == 3.0
+
+
+def test_cost_aware_explores_cheapest_first():
+    cands = [{"x": "pricey"}, {"x": "cheap"}, {"x": "mid"}]
+    pol = CostAwareUCB(cands, rounds=12,
+                       cost_fn=_costs({"pricey": 5.0, "cheap": 0.1,
+                                       "mid": 1.0}))
+    order = []
+    for _ in range(3):
+        cfg = pol.propose()
+        order.append(cfg["x"])
+        pol.observe(cfg, 1.0)
+    assert order == ["cheap", "mid", "pricey"]
+
+
+def test_cost_aware_unknown_cost_keeps_candidate_order():
+    # cost_fn=None (or returning None) => no penalty: the pull-once phase
+    # degrades to ContextualBandit's candidate-order sweep.
+    cands = [{"x": i} for i in range(3)]
+    pol = CostAwareUCB(cands, rounds=6)
+    order = []
+    for _ in range(3):
+        cfg = pol.propose()
+        order.append(cfg["x"])
+        pol.observe(cfg, 1.0)
+    assert order == [0, 1, 2]
+
+
+def test_cost_aware_tight_budget_skips_most_expensive():
+    # rounds tighter than the arm count: the arms left unmeasured are the
+    # most expensive ones (the veto gate's all-or-nothing, made gradual).
+    cands = [{"x": i} for i in range(4)]
+    pol = CostAwareUCB(cands, rounds=2,
+                       cost_fn=_costs({0: 4.0, 1: 1.0, 2: 3.0, 3: 2.0}))
+    seen = []
+    while True:
+        cfg = pol.propose()
+        if cfg is None:
+            break
+        seen.append(cfg["x"])
+        pol.observe(cfg, 1.0)
+    assert seen == [1, 3]          # two cheapest; x=0 and x=2 never built
+
+
+def test_cost_aware_penalty_sunk_after_observe():
+    cands = [{"x": 0}, {"x": 1}]
+    pol = CostAwareUCB(cands, rounds=8, cost_fn=_costs({0: 2.0, 1: 2.0}))
+    stats = {s["config"]["x"]: s for s in pol.arm_stats()}
+    assert stats[0]["penalty"] > 0 and stats[1]["penalty"] > 0
+    for cfg in cands:
+        pol.observe(cfg, 1.0)
+    stats = {s["config"]["x"]: s for s in pol.arm_stats()}
+    assert stats[0]["penalty"] == 0 and stats[1]["penalty"] == 0
+
+
+def test_cost_aware_built_fn_zeroes_penalty():
+    # A cache hit (built_fn True) is free even before any observation —
+    # the warm-start story: remotely compiled arms explore without penalty.
+    cands = [{"x": "hot"}, {"x": "cold"}]
+    pol = CostAwareUCB(cands, rounds=8,
+                       cost_fn=_costs({"hot": 9.0, "cold": 1.0}),
+                       built_fn=lambda cfg: cfg["x"] == "hot")
+    assert pol.propose() == {"x": "hot"}   # despite the 9x estimate
+    stats = {s["config"]["x"]: s for s in pol.arm_stats()}
+    assert stats["hot"]["penalty"] == 0 and stats["cold"]["penalty"] > 0
+
+
+def test_cost_aware_peek_covers_cheap_phase_only():
+    cands = [{"x": i} for i in range(3)]
+    pol = CostAwareUCB(cands, rounds=10,
+                       cost_fn=_costs({0: 3.0, 1: 1.0, 2: 2.0}))
+    assert pol.peek(5) == [{"x": 1}, {"x": 2}, {"x": 0}]   # cheapest-first
+    peeked = pol.peek(1)[0]
+    peeked["x"] = 99                                       # copies, no alias
+    cfg = pol.propose()
+    assert cfg == {"x": 1}
+    pol.observe(cfg, 1.0)
+    assert pol.peek(5) == [{"x": 2}, {"x": 0}]
+    for _ in range(2):
+        pol.observe(pol.propose(), 1.0)
+    assert pol.peek(5) == []       # pulled arms: scores are metric-driven
+
+
+def test_cost_aware_auto_rounds_and_validation():
+    pol = CostAwareUCB([{"x": 0}, {"x": 1}])
+    assert pol.rounds == 8                                 # 4x arms
+    with pytest.raises(ValueError):
+        CostAwareUCB([])
+    with pytest.raises(ValueError):
+        CostAwareUCB([{"x": 0}], dwell_s=0.0)
+
+
+def test_cost_aware_factory_deepcopy():
+    from copy import deepcopy
+    pol = CostAwareUCB([{"x": 0}, {"x": 1}], rounds=4,
+                       cost_fn=_costs({0: 1.0, 1: 2.0}))
+    pol.observe({"x": 0}, 5.0)
+    clone = deepcopy(pol)          # Controller policy-factory protocol
+    clone.reset()
+    assert clone.best() == (None, -math.inf)
+    assert pol.best()[0] == {"x": 0}

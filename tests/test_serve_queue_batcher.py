@@ -7,7 +7,8 @@ import pytest
 from repro.serve import (AdmissionQueue, Completion, ContinuousBatcher,
                          DeadlineAware, FCFS, OpenLoopSource, Request,
                          ServeMetrics, ShortestJobFirst, default_schemes,
-                         make_scheduler, pseudo_poisson_times)
+                         make_scheduler, pseudo_poisson_times,
+                         substream_seed)
 
 
 class FakeClock:
@@ -120,6 +121,22 @@ def test_pseudo_poisson_deterministic_and_phased():
     lo = sum(1 for t in a if t < 1.0)
     hi = sum(1 for t in a if t >= 1.0)
     assert hi > 2 * lo                                # the ramp ramps
+
+
+def test_substream_seed_deterministic_per_replica():
+    # Same (root, replica) -> same seed; every replica gets a distinct
+    # substream, so fleet schedules never replay each other's bursts.
+    assert substream_seed(7, 0) == substream_seed(7, 0)
+    assert substream_seed(7, "0") == substream_seed(7, "0")
+    seeds = {substream_seed(7, i) for i in range(16)}
+    assert len(seeds) == 16
+    assert substream_seed(7, 1) != substream_seed(8, 1)   # root matters
+    # and the substreams drive genuinely different arrival processes:
+    a = pseudo_poisson_times([(1.0, 100.0)], seed=substream_seed(3, 1))
+    b = pseudo_poisson_times([(1.0, 100.0)], seed=substream_seed(3, 2))
+    assert a != b
+    assert a == pseudo_poisson_times([(1.0, 100.0)],
+                                     seed=substream_seed(3, 1))
 
 
 def test_open_loop_source_pumps_due_arrivals_only():
