@@ -47,7 +47,23 @@ tracked by:
                              behind a ReplicaRouter — recording goodput
                              scaling vs the single replica, recompiles
                              on the warm replicas (must be zero), and
-                             the cold-vs-warm time-to-settled speedup.
+                             the cold-vs-warm time-to-settled speedup,
+* ``safety``               — safe online exploration: the same open-loop
+                             schedule served three times with a
+                             deliberately-broken candidate and an
+                             adoption-correlated fault injected mid-run —
+                             a no-injection baseline, an unsafe run
+                             (live sweep serves the broken config and
+                             silently absorbs the fault), and a safe run
+                             (shadow evaluation rejects the broken
+                             config off-path, the winner canaries and
+                             promotes, auto-rollback reverts the fault
+                             and quarantines the config) — recording
+                             goodput ratios, rollback/quarantine
+                             counters, and per-call dispatch-slot
+                             samples proving the broken config never
+                             served live and no quarantined config was
+                             ever reactivated.
 
 CLI:
     PYTHONPATH=src:. python -m benchmarks.serve_bench \
@@ -70,7 +86,7 @@ import jax.numpy as jnp
 from benchmarks.common import Row, measure_dispatch_overhead
 from repro import configs
 from repro.core import (ChangeDetector, Controller, EWMA, ExhaustiveSweep,
-                        IridescentRuntime, guards)
+                        IridescentRuntime, SafetyController, guards)
 from repro.models import transformer as model
 from repro.models.transformer import RunOptions
 from repro.training import make_decode_builder
@@ -1049,6 +1065,305 @@ def run_fleet(replicas: int = 2, n_requests: int = 48, rate: float = 40.0,
     }
 
 
+def _safety_builder(state):
+    """Bench handler whose per-mode cost is a host-side sleep.
+
+    ``mode`` is the spec point under search; the sleep magnitudes live in
+    the mutable ``state`` dict read *at call time* through
+    ``jax.pure_callback``, so the bench driver can degrade a mode
+    mid-run (the injected fault) without recompiling anything:
+
+    * ``split``  — the dependable incumbent (moderate, stable sleep),
+    * ``fused``  — the attractive candidate (fast… until
+      ``state["degraded"]`` flips, then it costs ``degrade_s``),
+    * ``bad``    — the deliberately-broken candidate (always slow).
+
+    Every mode routes through the same callback (sleep 0 where not
+    penalised) so the host-roundtrip overhead is symmetric, and the
+    callback's result is folded into the output so XLA cannot elide it.
+    """
+    _np = __import__("numpy")
+
+    def build(spec):
+        mode = spec.enum("mode", "split", ("split", "fused", "bad"),
+                         guarded=False)
+
+        def cb(_):
+            s = (state["degrade_s"]
+                 if (mode == "fused" and state["degraded"])
+                 else state["sleep"][mode])
+            if s > 0:
+                time.sleep(s)
+            return _np.float32(0.0)
+
+        def f(x, w):
+            if mode == "split":
+                h = w.shape[1] // 2
+                y = jnp.concatenate([x @ w[:, :h], x @ w[:, h:]], axis=-1)
+            else:
+                y = x @ w
+            pen = jax.pure_callback(
+                cb, jax.ShapeDtypeStruct((), jnp.float32), x[0, 0])
+            return y + pen
+
+        return f
+
+    return build
+
+
+def _calibrate_safety_step(d: int, batch: int, reps: int = 7) -> float:
+    """Median seconds per call of the safety handler with all sleeps at
+    zero — the base cost (matmul + dispatch + pure_callback roundtrip)
+    the synthetic mode latencies sit on top of."""
+    state = {"degraded": False, "degrade_s": 0.0,
+             "sleep": {"split": 0.0, "fused": 0.0, "bad": 0.0}}
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("safety_calib", _safety_builder(state),
+                          context_fn=lambda a, k: int(a[0].shape[0]))
+    w = jnp.zeros((d, d), jnp.float32)
+    x = jnp.zeros((batch, d), jnp.float32)
+    jax.block_until_ready(handler(x, w))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(handler(x, w))
+        ts.append(time.perf_counter() - t0)
+    rt.shutdown()
+    return sorted(ts)[len(ts) // 2]
+
+
+def run_safety(d: int = 256, batch: int = 8, n_requests: int = 160,
+               rate: float = 8.0, budgets=(4, 8), seed: int = 13,
+               dwell: int = 6, slo_slack: float = 2.0,
+               grace_s: float = 0.25, split_ms: float = 5.0,
+               fused_ms: float = 2.0, degrade_ms: float = 100.0,
+               bad_ms: float = 120.0, max_wall_s: float = 90.0) -> dict:
+    """Safe online exploration: shadow evaluation, canary activation and
+    auto-rollback under a deliberately-broken candidate plus a
+    post-promotion fault.
+
+    The same open-loop schedule (exponential interarrivals at ``rate``)
+    is served three times through the same engine/handler; per-mode cost
+    is a host sleep (:func:`_safety_builder`), so the margins are
+    deterministic on any host:
+
+    * **baseline** — plain Controller, candidate set {split, fused}, no
+      fault: the no-injection reference goodput.
+    * **unsafe**   — plain Controller with the broken ``bad`` candidate
+      in the sweep; the moment the search settles on ``fused``, that
+      config degrades (``degrade_ms`` per call, an adoption-correlated
+      fault).  The live sweep serves ``bad`` to real requests for a full
+      dwell, and the degradation lands inside the fresh ChangeDetector's
+      warmup window, so it is silently absorbed as the new baseline —
+      the context serves degraded ``fused`` for the rest of the run.
+    * **safe**     — SafetyController + ShadowEvaluator (idle-tick
+      mirrored pairs): ``bad`` is rejected in shadow without a single
+      live call; ``fused`` passes shadow, canaries, and promotes; the
+      same degradation then fires the seeded detector in one dwell and
+      auto-rollback reverts to the last-known-good incumbent and
+      quarantines ``fused``.
+
+    Per-request deadlines are ``slack x budget x`` the *incumbent* step
+    cost plus a fixed ``grace_s`` — sized so a shadow-pair stall
+    (``<= bad_ms``) never blows a deadline while a degraded live token
+    stream (``budget x degrade_ms``) always does.
+
+    Every live call samples both dispatch slots (active + canary), so
+    the output *proves* the two safety claims rather than asserting
+    them: ``bad`` never occupies a slot with safety on (it does in the
+    unsafe run), and after the rollback no sampled slot config was in
+    quarantine at sample time.  Acceptance: ``rollbacks >= 1``, safe
+    goodput >= 0.9x the no-injection baseline while the unsafe run
+    falls below it, and zero quarantine violations.
+    """
+    import random as _random
+
+    from repro.serve import (AdmissionQueue, ContinuousBatcher,
+                             OpenLoopSource, Request, ServeEngine,
+                             ServeMetrics, ShadowEvaluator,
+                             ShortestJobFirst)
+
+    split_s, fused_s = split_ms * 1e-3, fused_ms * 1e-3
+    degrade_s, bad_s = degrade_ms * 1e-3, bad_ms * 1e-3
+    c0 = _calibrate_safety_step(d, batch)
+    overhead = _calibrate_engine_overhead()
+    # Deadline: slack x the incumbent (split) per-token cost, plus a
+    # fixed grace absorbing bounded stalls (a shadow pair holds the loop
+    # for <= bad_s + split_s, under the grace by construction).
+    slo_per_token = slo_slack * (split_s + c0 + overhead)
+
+    def schedule():
+        rng = _random.Random(seed)
+        out, t = [], 0.0
+        for _ in range(n_requests):
+            t += rng.expovariate(rate)
+            g = rng.choice(budgets)
+            out.append((t, Request(prompt_tokens=16, max_new_tokens=g,
+                                   deadline_s=g * slo_per_token + grace_s)))
+        return out
+
+    w = jnp.zeros((d, d), jnp.float32)
+
+    def run_once(kind: str) -> dict:
+        state = {"degraded": False, "degrade_s": degrade_s,
+                 "sleep": {"split": split_s, "fused": fused_s,
+                           "bad": bad_s}}
+        rt = IridescentRuntime(async_compile=False)
+        handler = rt.register("safety_step", _safety_builder(state),
+                              context_fn=lambda a, k: int(a[0].shape[0]))
+        candidates = [{"mode": "split"}, {"mode": "fused"}]
+        if kind != "baseline":
+            candidates.append({"mode": "bad"})     # the injected fault
+        latency = {}
+
+        def context_latency_rate(view):
+            v = latency[view.key].value if view.key in latency else None
+            return 1.0 / max(v, 1e-9) if v else 0.0
+
+        # Sync compiles + wait_compiles=True as in run_disagg: dwell
+        # attribution over compile pipelining (covered elsewhere).
+        kwargs = dict(metric=context_latency_rate, dwell=dwell,
+                      change_detector=lambda: ChangeDetector(0.3),
+                      wait_compiles=True, prefetch=0)
+        shadow = None
+        if kind == "safe":
+            shadow = ShadowEvaluator(handler, sample_frac=0.25, k=3,
+                                     tolerance=1.5)
+            controller = SafetyController(
+                handler, lambda: ExhaustiveSweep(candidates),
+                shadow=shadow, canary_frac=0.25, promote_after=2,
+                **kwargs)
+        else:
+            controller = Controller(
+                handler, lambda: ExhaustiveSweep(candidates), **kwargs)
+
+        slots = {"modes": {}, "bad_live": 0, "quarantine_violations": 0}
+        flip = {"t": None}
+        t_start = 0.0
+
+        def maybe_flip():
+            # The adoption-correlated fault: fused degrades the moment
+            # the system adopts it for live traffic — at promotion with
+            # safety on, at settling without.
+            if kind == "baseline" or flip["t"] is not None:
+                return
+            if (controller.promotions >= 1 if kind == "safe"
+                    else controller.settled()):
+                state["degraded"] = True
+                flip["t"] = time.perf_counter() - t_start
+
+        def timed_handler(x, w):
+            key = int(x.shape[0])
+            view = handler.context(key)
+            for cfg in (view.active_config(), view.canary_config()):
+                if not cfg:
+                    continue             # empty = generic incumbent
+                m = cfg.get("mode", "split")
+                slots["modes"][m] = slots["modes"].get(m, 0) + 1
+                if m == "bad":
+                    slots["bad_live"] += 1
+                if (controller.quarantine is not None
+                        and controller.quarantine.blocked(
+                            handler.name, key, cfg)):
+                    slots["quarantine_violations"] += 1
+            maybe_flip()
+            t0 = time.perf_counter()
+            y = handler(x, w)
+            jax.block_until_ready(y)
+            latency.setdefault(key, EWMA(0.5)).update(
+                time.perf_counter() - t0)
+            return y
+
+        class Exec:
+            def execute(self, batch):
+                timed_handler(jnp.zeros((batch.size, d), jnp.float32), w)
+
+        metrics = ServeMetrics()
+        engine = ServeEngine(
+            handler, controller, ContinuousBatcher(batch, scheme="single"),
+            ShortestJobFirst(), executor=Exec(),
+            queue=AdmissionQueue(depth=n_requests + batch,
+                                 policy="shed-oldest"),
+            metrics=metrics, shadow=shadow)
+        source = OpenLoopSource(engine.queue, schedule())
+        t_start = time.perf_counter()
+        engine.run(source=source, duration_s=max_wall_s)
+        engine.drain(timeout_s=max_wall_s / 2)
+        wall = time.perf_counter() - t_start
+        stats = engine.stats()
+        serve = stats["serve"]
+        best = controller.best_configs().get(batch) or {}
+        row = {
+            "kind": kind,
+            "wall_s": round(wall, 3),
+            "offered": stats["queue"]["submitted"],
+            "completed": serve["completed"],
+            "completed_tokens": serve["completed_tokens"],
+            "goodput_tok_per_s": round(serve["goodput_tokens"] / wall, 2),
+            "tok_per_s": round(serve["completed_tokens"] / wall, 2),
+            "slo_met": serve["slo_met"],
+            "slo_missed": serve["slo_missed"],
+            "shed": stats["queue"]["shed"] + serve["shed"],
+            "latency_p50_ms": serve["latency_p50_ms"],
+            "latency_p95_ms": serve["latency_p95_ms"],
+            "settled_mode": best.get("mode"),
+            "fault_injected_at_s": (round(flip["t"], 3)
+                                    if flip["t"] is not None else None),
+            "live_slot_modes": dict(slots["modes"]),
+            "bad_live_slot_samples": slots["bad_live"],
+            "quarantine_violations": slots["quarantine_violations"],
+        }
+        if "safety" in stats:
+            row["safety"] = stats["safety"]
+        if "shadow" in stats:
+            row["shadow"] = stats["shadow"]
+        if shadow is not None:
+            shadow.close()
+        rt.shutdown()
+        return row
+
+    baseline = run_once("baseline")
+    unsafe = run_once("unsafe")
+    safe = run_once("safe")
+    base_good = baseline["goodput_tok_per_s"]
+    safety = safe.get("safety", {})
+    violations = safe["quarantine_violations"]
+    return {
+        "seed": seed,
+        "d": d,
+        "batch": batch,
+        "rate_per_s": rate,
+        "n_requests": n_requests,
+        "mode_latency_ms": {"split": split_ms, "fused": fused_ms,
+                            "fused_degraded": degrade_ms, "bad": bad_ms},
+        "calibration_ms": {"base_step": round(c0 * 1e3, 3),
+                           "engine_overhead": round(overhead * 1e3, 3)},
+        "slo_per_token_ms": round(slo_per_token * 1e3, 3),
+        "grace_ms": round(grace_s * 1e3, 1),
+        "baseline": baseline,
+        "unsafe": unsafe,
+        "safe": safe,
+        "goodput_safe_x_baseline": (round(safe["goodput_tok_per_s"]
+                                          / base_good, 3)
+                                    if base_good > 0 else None),
+        "goodput_unsafe_x_baseline": (round(unsafe["goodput_tok_per_s"]
+                                            / base_good, 3)
+                                      if base_good > 0 else None),
+        "rollback_triggered": safety.get("rollbacks", 0) >= 1,
+        "promoted_before_rollback": safety.get("promotions", 0) >= 1,
+        "shadow_rejected_bad": safety.get("shadow_rejections", 0) >= 1,
+        "bad_never_live_with_safety": safe["bad_live_slot_samples"] == 0,
+        "bad_served_live_without_safety":
+            unsafe["bad_live_slot_samples"] > 0,
+        "quarantine_violations": violations,
+        "quarantined_never_reactivated": violations == 0,
+        "goodput_with_safety_ge_0.9x_baseline":
+            safe["goodput_tok_per_s"] >= 0.9 * base_good,
+        "unsafe_craters":
+            unsafe["goodput_tok_per_s"] < 0.9 * base_good,
+    }
+
+
 def write_json(path: str, result: dict) -> None:
     with open(path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
@@ -1062,12 +1377,14 @@ def run() -> list[Row]:
     result["open_loop"] = run_open_loop()
     result["disagg"] = run_disagg()
     result["fleet"] = run_fleet()
+    result["safety"] = run_safety()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
     mixed = result["mixed"]
     ol = result["open_loop"]
     dg = result["disagg"]
     fl = result["fleet"]
+    sf = result["safety"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
             f"wall={result['wall_s']}s"),
@@ -1102,10 +1419,19 @@ def run() -> list[Row]:
             f"router={fl['router']}"),
         Row("serve/fleet_warm_recompiles", float(fl["warm_recompiles"]),
             f"settle_speedup={fl['time_to_settled_speedup_x']}x"),
+        Row("serve/safety_goodput_x_baseline",
+            sf["goodput_safe_x_baseline"] or 0.0,
+            f"unsafe={sf['goodput_unsafe_x_baseline']} "
+            f"rollbacks={sf['safe'].get('safety', {}).get('rollbacks')}"),
+        Row("serve/safety_quarantine_violations",
+            float(sf["quarantine_violations"]),
+            f"bad_live_with_safety={sf['safe']['bad_live_slot_samples']} "
+            f"without={sf['unsafe']['bad_live_slot_samples']}"),
     ]
 
 
-_SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg", "fleet")
+_SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg", "fleet",
+              "safety")
 
 
 def main() -> None:
@@ -1154,6 +1480,8 @@ def main() -> None:
     if args.scenario in ("all", "fleet"):
         result["fleet"] = run_fleet(replicas=args.fleet_replicas,
                                     router=args.fleet_router)
+    if args.scenario in ("all", "safety"):
+        result["safety"] = run_safety()
     write_json(args.out, result)
     print(json.dumps(result, indent=1, sort_keys=True))
 

@@ -35,7 +35,7 @@ from repro.distributed.sharding import spec_for_axes
 logger = logging.getLogger("repro.checkpoint.store")
 
 __all__ = ["CheckpointManager", "save_spec_state", "restore_spec_state",
-           "SPEC_STATE_VERSION", "PLANE_RECORD_VERSION",
+           "load_safety_state", "SPEC_STATE_VERSION", "PLANE_RECORD_VERSION",
            "save_plane_record", "load_plane_record"]
 
 
@@ -68,15 +68,53 @@ def _decode_config(cfg: dict) -> dict:
     return out
 
 
-#: spec_state.json format version.  v2 is per-context:
-#: ``{"version": 2, "handlers": {name: {"contexts": {encoded_key: cfg}}}}``.
-#: The v1 flat format ``{name: cfg}`` (one global config per handler) is
-#: still read and mapped onto each handler's default context.
-SPEC_STATE_VERSION = 2
+def _parse_safety_entry(entry: dict) -> dict:
+    """Decode one handler's v3 safety fields, normalizing context keys
+    through decode -> re-encode like the contexts themselves.  Malformed
+    pieces are dropped, never raised — safety metadata is advisory on read
+    and must not take a restore down."""
+    from repro.core.runtime import decode_context_key, encode_context_key
+
+    lkg: dict[str, dict] = {}
+    quar: dict[str, list] = {}
+    raw_lkg = entry.get("last_known_good")
+    if isinstance(raw_lkg, dict):
+        for enc, cfg in raw_lkg.items():
+            if not isinstance(cfg, dict):
+                continue
+            try:
+                enc = encode_context_key(decode_context_key(enc))
+                lkg[enc] = _decode_config(cfg)
+            except Exception:
+                continue
+    raw_quar = entry.get("quarantined")
+    if isinstance(raw_quar, dict):
+        for enc, cfgs in raw_quar.items():
+            if not isinstance(cfgs, list):
+                continue
+            try:
+                enc = encode_context_key(decode_context_key(enc))
+            except Exception:
+                continue
+            decoded = [_decode_config(c) for c in cfgs if isinstance(c, dict)]
+            if decoded:
+                quar[enc] = decoded
+    return {"last_known_good": lkg, "quarantined": quar}
+
+
+#: spec_state.json format version.  v3 adds optional per-handler safety
+#: state on top of the v2 per-context layout:
+#: ``{"version": 3, "handlers": {name: {"contexts": {encoded_key: cfg},
+#:    "last_known_good": {encoded_key: cfg},
+#:    "quarantined": {encoded_key: [cfg, ...]}}}}``.
+#: v2 (no safety fields) and the v1 flat format ``{name: cfg}`` (one global
+#: config per handler, mapped onto the default context) are still read.
+SPEC_STATE_VERSION = 3
 
 
 def save_spec_state(path: str, runtime: Any,
-                    keep: "Any | None" = None) -> None:
+                    keep: "Any | None" = None,
+                    safety: "dict | None" = None) -> None:
     """Persist each handler's active configuration per context
     (atomic write, versioned format).
 
@@ -85,12 +123,32 @@ def save_spec_state(path: str, runtime: Any,
     so a context still mid-sweep never writes its candidate config as the
     next restart's "winner", while every settled context's tuned config is
     saved regardless.
+
+    ``safety`` is the optional per-handler safety state —
+    ``{handler: {"last_known_good": {enc_key: cfg},
+    "quarantined": {enc_key: [cfg, ...]}}}`` as produced by
+    :meth:`~repro.core.safety.SafetyController.safety_state` — persisted so
+    a restart neither re-trusts a config that was rolled back nor
+    re-explores one that was quarantined.
     """
+    safety = safety or {}
     handlers = {}
     for name, ctx_cfgs in runtime.spec_state().items():
-        handlers[name] = {"contexts": {
+        entry: dict[str, Any] = {"contexts": {
             enc: _encode_config(cfg) for enc, cfg in ctx_cfgs.items()
             if keep is None or keep(name, enc)}}
+        safe = safety.get(name)
+        if isinstance(safe, dict):
+            lkg = safe.get("last_known_good") or {}
+            quar = safe.get("quarantined") or {}
+            if lkg:
+                entry["last_known_good"] = {
+                    enc: _encode_config(cfg) for enc, cfg in lkg.items()}
+            if quar:
+                entry["quarantined"] = {
+                    enc: [_encode_config(c) for c in cfgs]
+                    for enc, cfgs in quar.items()}
+        handlers[name] = entry
     state = {"version": SPEC_STATE_VERSION, "handlers": handlers}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
@@ -113,6 +171,7 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
     brings every handler back to its tuned configs with zero recompiles.
     Returns True if any state was applied or seeded.
     """
+    from repro.core.points import config_key
     from repro.core.runtime import (DEFAULT_CONTEXT, decode_context_key,
                                     encode_context_key)
 
@@ -126,13 +185,16 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
                        path, e)
         return False
     version = state.get("version") if isinstance(state, dict) else None
-    if version == 2:
+    per_safety: dict[str, dict] = {}
+    if version in (2, 3):
         handlers = state.get("handlers")
         handlers = handlers if isinstance(handlers, dict) else {}
         per_handler = {}
         for name, entry in handlers.items():
             ctxs = entry.get("contexts") if isinstance(entry, dict) else None
             per_handler[name] = ctxs if isinstance(ctxs, dict) else {}
+            if version == 3 and isinstance(entry, dict):
+                per_safety[name] = _parse_safety_entry(entry)
     elif version is None and isinstance(state, dict):
         # v1 flat format (no version field): {handler: config} -> the
         # default context.
@@ -155,6 +217,9 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
             logger.warning("spec state for handler %r malformed; "
                            "keeping generic", name)
             continue
+        safe = per_safety.get(name) or {}
+        lkg_map = safe.get("last_known_good") or {}
+        quar_map = safe.get("quarantined") or {}
         for enc_key, cfg in ctx_cfgs.items():
             # Normalize the stored encoding through decode -> re-encode:
             # files written by the legacy repr encoder ("('prefill', 4)")
@@ -170,6 +235,22 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
                     raise TypeError(f"config is {type(cfg).__name__}, "
                                     f"not a dict")
                 decoded = _decode_config(cfg)
+                blocked = {config_key(c) for c in quar_map.get(enc_key, ())}
+                if blocked and config_key(decoded) in blocked:
+                    # A quarantined config is NEVER restored — a process
+                    # that crashed right after a rollback must not resume
+                    # on the config that caused it.  Fall back to the
+                    # recorded last-known-good, else stay generic.
+                    fallback = lkg_map.get(enc_key)
+                    if fallback is not None and \
+                            config_key(fallback) not in blocked:
+                        decoded = dict(fallback)
+                    else:
+                        logger.warning(
+                            "spec state for handler %r context %s is "
+                            "quarantined with no last-known-good; "
+                            "keeping generic", name, enc_key)
+                        continue
                 if enc_key == default_enc:
                     handler.specialize(decoded, wait=wait)
                 else:
@@ -180,6 +261,39 @@ def restore_spec_state(path: str, runtime: Any, wait: bool = False) -> bool:
                                "longer valid (%s: %s); keeping generic",
                                name, enc_key, type(e).__name__, e)
     return applied
+
+
+def load_safety_state(path: str) -> dict:
+    """Read the per-handler safety state (last-known-good + quarantined)
+    from a ``spec_state.json``.
+
+    Returns ``{handler: {"last_known_good": {enc_key: cfg},
+    "quarantined": {enc_key: [cfg, ...]}}}`` with decoded configs —
+    the shape :class:`~repro.core.safety.SafetyController` accepts for warm
+    initialization.  v1/v2 files (no safety fields), missing files, and
+    unreadable files all yield ``{}``: safety state is an additive v3
+    feature and its absence is never an error.
+    """
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(state, dict) or state.get("version") != 3:
+        return {}
+    handlers = state.get("handlers")
+    if not isinstance(handlers, dict):
+        return {}
+    out = {}
+    for name, entry in handlers.items():
+        if not isinstance(entry, dict):
+            continue
+        safe = _parse_safety_entry(entry)
+        if safe["last_known_good"] or safe["quarantined"]:
+            out[name] = safe
+    return out
 
 
 # -- fleet spec-plane records ---------------------------------------------------
@@ -195,10 +309,16 @@ PLANE_RECORD_VERSION = 1
 
 def save_plane_record(path: str, *, handler: str, context: str, config: dict,
                       goodput: float, epoch: int, replica: str,
-                      t: float) -> None:
+                      t: float, quarantined: "list | None" = None) -> None:
     """Atomically publish one spec-plane record (same mkstemp +
     ``os.replace`` discipline as :func:`save_spec_state`: a subscriber
-    polling the shared directory never observes a torn write)."""
+    polling the shared directory never observes a torn write).
+
+    ``quarantined`` optionally lists configs this replica has quarantined
+    for the record's context — an additive field (version stays 1; old
+    readers ignore it) that lets other replicas skip configs already proven
+    to regress live traffic somewhere in the fleet.
+    """
     record = {
         "version": PLANE_RECORD_VERSION,
         "handler": str(handler),
@@ -209,6 +329,8 @@ def save_plane_record(path: str, *, handler: str, context: str, config: dict,
         "replica": str(replica),
         "t": float(t),
     }
+    if quarantined:
+        record["quarantined"] = [_encode_config(c) for c in quarantined]
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                prefix=".tmp_plane_")
@@ -237,6 +359,10 @@ def load_plane_record(path: str) -> "dict | None":
         cfg = record["config"]
         if not isinstance(cfg, dict):
             raise TypeError(f"config is {type(cfg).__name__}, not a dict")
+        raw_quar = record.get("quarantined")
+        quarantined = ([_decode_config(c) for c in raw_quar
+                        if isinstance(c, dict)]
+                       if isinstance(raw_quar, list) else [])
         return {
             "handler": str(record["handler"]),
             "context": str(record["context"]),
@@ -245,6 +371,7 @@ def load_plane_record(path: str) -> "dict | None":
             "epoch": int(record["epoch"]),
             "replica": str(record["replica"]),
             "t": float(record["t"]),
+            "quarantined": quarantined,
         }
     except (KeyError, TypeError, ValueError) as e:
         logger.warning("plane record %s malformed (%s: %s); ignoring",

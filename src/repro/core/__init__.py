@@ -36,6 +36,7 @@ from repro.core.policy import (ContextualBandit, CoordinateDescent,
                                Explorer, Phase, Policy, ScoreBoard,
                                SuccessiveHalving, ThompsonSampling)
 from repro.core.controller import Controller
+from repro.core.safety import CanaryGate, Quarantine, SafetyController
 from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
                                 StepTimer, ThroughputCounter,
                                 ThroughputWindow)
@@ -51,6 +52,7 @@ __all__ = [
     "ContextualBandit", "Controller", "CoordinateDescent", "CostAwareUCB",
     "EpsilonGreedy", "ExhaustiveSweep", "Explorer", "Phase", "Policy",
     "ScoreBoard", "SuccessiveHalving", "ThompsonSampling",
+    "CanaryGate", "Quarantine", "SafetyController",
     "AtomicCounter", "ChangeDetector", "EWMA",
     "StepTimer", "ThroughputCounter", "ThroughputWindow", "fastpath",
     "guards", "instrumentation",

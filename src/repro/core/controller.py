@@ -42,7 +42,7 @@ from typing import Any, Callable, Mapping
 
 from repro.core.metrics import ChangeDetector
 from repro.core.points import Config, config_key
-from repro.core.policy import Phase, Policy
+from repro.core.policy import ContextualBandit, CostAwareUCB, Phase, Policy
 
 logger = logging.getLogger("repro.core.controller")
 
@@ -94,10 +94,11 @@ class Controller:
         initial_configs: Mapping[Any, Config] | None = None,
         cost_fn: Callable[[Config], float | None] | None = None,
         sec_per_call_prior: float | None = None,
+        candidates: "list[Config] | None" = None,
+        cost_weight: float = 1.0,
+        reexplore_decay: float = 0.5,
+        quarantine=None,
     ):
-        if policy is None:
-            raise ValueError("Controller requires a policy (instance or "
-                             "zero-arg factory)")
         if handler is None and measure is None:
             raise ValueError("Controller needs a handler (online mode) or "
                              "a measure callable (offline mode)")
@@ -113,7 +114,13 @@ class Controller:
         #: lets the budget gate act on the very first candidate; without
         #: it the gate stays off until one dwell has been timed.
         self.sec_per_call_prior = sec_per_call_prior
-        self._policy_factory = self._as_factory(policy, Policy)
+        #: confidence scale applied to the incumbent policy's statistics
+        #: when a workload change triggers re-exploration (decayed prior:
+        #: smaller = closer to a from-scratch restart)
+        self.reexplore_decay = float(reexplore_decay)
+        #: quarantine registry consulted before proposing/electing configs
+        #: (duck-typed: ``blocked(handler_name, context_key, config)``)
+        self.quarantine = quarantine
         self._change_factory = self._as_factory(
             change_detector if change_detector is not None else ChangeDetector(),
             ChangeDetector)
@@ -125,8 +132,29 @@ class Controller:
                 handler.name, config=cfg))
         else:
             self._cost_fn = lambda cfg: None
+        if policy is None:
+            policy = self._default_policy_factory(candidates, cost_weight)
+        self._policy_factory = self._as_factory(policy, Policy)
         self._ctls: dict[Any, _CtxCtl] = {}
         self._offline: tuple[Policy, list] | None = None
+
+    def _default_policy_factory(self, candidates, cost_weight: float):
+        """Default policy when only a candidate list is given: with a
+        compile ``budget``, :class:`CostAwareUCB` folds the same Table-4
+        cost telemetry the veto gate consults into the acquisition score
+        (the veto still applies on top as a hard ceiling); without one,
+        a plain :class:`ContextualBandit`."""
+        if candidates is None:
+            raise ValueError("Controller requires a policy (instance or "
+                             "zero-arg factory) or a candidates= list")
+        cands = [dict(c) for c in candidates]
+        if self.budget is None:
+            return lambda: ContextualBandit(cands)
+        dwell_s = (self.dwell * self.sec_per_call_prior
+                   if self.sec_per_call_prior else 1.0)
+        return lambda: CostAwareUCB(cands, cost_fn=self._cost_fn,
+                                    dwell_s=dwell_s,
+                                    cost_weight=cost_weight)
 
     @staticmethod
     def _as_factory(obj, cls) -> Callable:
@@ -168,8 +196,17 @@ class Controller:
         view = self.handler.context(key)
         ctl = _CtxCtl(view, self._policy_factory(), self._change_factory())
         ctl.sec_per_call = self.sec_per_call_prior
+        if self.quarantine is not None:
+            name = self.handler.name
+            ctl.policy.set_exclude(
+                lambda cfg, _k=key: self.quarantine.blocked(name, _k, cfg))
         self._ctls[key] = ctl
         init = self._initial_config_for(key)
+        if init is not None and self._quarantined(ctl, init):
+            logger.warning("controller[%s/%r]: restored config %s is "
+                           "quarantined; exploring fresh", self.handler.name,
+                           key, init)
+            init = None
         if init is not None:
             # A previous run already paid for this context's search: start
             # exploiting its winner; the ChangeDetector re-triggers
@@ -207,9 +244,17 @@ class Controller:
         dwell_s = self.dwell * ctl.sec_per_call
         return est > self.budget * dwell_s
 
+    def _quarantined(self, ctl: _CtxCtl, cfg: Config) -> bool:
+        """Whether the quarantine registry blocks ``cfg`` for this context
+        (a config rolled back after a bad promotion is never re-proposed)."""
+        if self.quarantine is None:
+            return False
+        name = self.handler.name if self.handler is not None else ""
+        return self.quarantine.blocked(name, ctl.view.key, cfg)
+
     def _next(self, ctl: _CtxCtl) -> None:
         """Advance the context's policy to its next candidate (skipping
-        over-budget ones) or into EXPLOIT."""
+        over-budget and quarantined ones) or into EXPLOIT."""
         exhausted = False
         for _ in range(_MAX_PROPOSALS_PER_ADVANCE):
             cfg = ctl.policy.propose()
@@ -217,20 +262,15 @@ class Controller:
                 exhausted = True
                 break
             key = config_key(cfg)
-            if key not in ctl.vetoed and not self._over_budget(ctl, cfg):
-                ctl.pending = dict(cfg)
-                ctl.view.specialize(cfg, wait=self.wait_compiles)
-                if self.prefetch:
-                    # Overlap this candidate's dwell window with the builds
-                    # of the next ones (speculative pipeline).
-                    ctl.view.prefetch(ctl.policy.peek(self.prefetch))
-                ctl.phase = Phase.EXPLORE
+            if key not in ctl.vetoed and not self._over_budget(ctl, cfg) \
+                    and not self._quarantined(ctl, cfg):
+                self._begin_candidate(ctl, cfg)
                 break
             if key not in ctl.vetoed:
                 ctl.vetoed.add(key)
                 ctl.skipped.append(dict(cfg))
-                logger.info("controller[%r]: skipping %s (expected compile "
-                            "cost exceeds budget)", ctl.view.key, cfg)
+                logger.info("controller[%r]: skipping %s (over budget or "
+                            "quarantined)", ctl.view.key, cfg)
                 continue
             if key not in ctl.floored:
                 # The policy re-proposed a vetoed candidate (e.g. a bandit
@@ -248,20 +288,40 @@ class Controller:
             exhausted = True
         if exhausted:
             best, metric = ctl.policy.best()
-            if best is not None and config_key(best) in ctl.vetoed:
-                # Never elect a config the budget gate refused to build.
+            if best is not None and (config_key(best) in ctl.vetoed
+                                     or self._quarantined(ctl, best)):
+                # Never elect a config the budget gate refused to build or
+                # that the safety layer quarantined.
                 best, metric = None, -math.inf
-            if best is not None:
-                ctl.view.specialize(best, wait=self.wait_compiles)
-            # Entering EXPLOIT: any still-queued speculative builds are for
-            # candidates the policy has moved past — cancel them.
-            ctl.view.prefetch(())
-            ctl.phase = Phase.EXPLOIT
-            ctl.pending = dict(best) if best is not None else None
-            logger.info("controller[%r]: exploiting %s (metric=%.3f)",
-                        ctl.view.key, best, metric)
+            self._begin_exploit(ctl, best, metric)
         ctl.view.tput.reset()
         ctl.mark_t = time.perf_counter()
+
+    # -- lifecycle transition hooks (the safety layer overrides these) -----------
+    def _begin_candidate(self, ctl: _CtxCtl, cfg: Config) -> None:
+        """Start measuring ``cfg``: activate it on live traffic and dwell.
+        (The safety layer overrides this to evaluate in shadow instead.)"""
+        ctl.pending = dict(cfg)
+        ctl.view.specialize(cfg, wait=self.wait_compiles)
+        if self.prefetch:
+            # Overlap this candidate's dwell window with the builds of the
+            # next ones (speculative pipeline).
+            ctl.view.prefetch(ctl.policy.peek(self.prefetch))
+        ctl.phase = Phase.EXPLORE
+
+    def _begin_exploit(self, ctl: _CtxCtl, best: dict | None,
+                       metric: float) -> None:
+        """Exploration exhausted: activate the elected winner and settle.
+        (The safety layer overrides this to stage a canary first.)"""
+        if best is not None:
+            ctl.view.specialize(best, wait=self.wait_compiles)
+        # Entering EXPLOIT: any still-queued speculative builds are for
+        # candidates the policy has moved past — cancel them.
+        ctl.view.prefetch(())
+        ctl.phase = Phase.EXPLOIT
+        ctl.pending = dict(best) if best is not None else None
+        logger.info("controller[%r]: exploiting %s (metric=%.3f)",
+                    ctl.view.key, best, metric)
 
     # -- the per-iteration hook --------------------------------------------------
     def step(self) -> None:
@@ -305,12 +365,27 @@ class Controller:
         ctl.history.append((Phase.EXPLOIT,
                             dict(ctl.pending) if ctl.pending is not None
                             else None, rate))
+        self._note_exploit(ctl, rate)
+        prev = ctl.change.ewma.value
         if ctl.change.update(rate):
-            logger.info("controller[%r]: change detected (metric=%.3f) — "
-                        "re-exploring", ctl.view.key, rate)
-            ctl.explorations += 1
-            ctl.policy.reset()
-            self._next(ctl)
+            self._on_change(ctl, rate, prev)
+
+    def _note_exploit(self, ctl: _CtxCtl, rate: float) -> None:
+        """Hook: one settled-phase observation (the safety layer tracks its
+        in-SLO baseline here)."""
+
+    def _on_change(self, ctl: _CtxCtl, rate: float,
+                   prev: float | None) -> None:
+        """The ChangeDetector fired during EXPLOIT.  Re-explore from a
+        decayed prior: the incumbent's observation history survives (scaled
+        by ``reexplore_decay``), so a transient single-dwell blip widens
+        confidence bounds instead of restarting the search from scratch.
+        (The safety layer overrides this to roll back first on regression.)"""
+        logger.info("controller[%r]: change detected (metric=%.3f) — "
+                    "re-exploring", ctl.view.key, rate)
+        ctl.explorations += 1
+        ctl.policy.decay(self.reexplore_decay)
+        self._next(ctl)
 
     # -- offline mode ------------------------------------------------------------
     def run(self, max_steps: int = 100000) -> tuple[dict | None, float]:

@@ -44,8 +44,9 @@ class AtomicCounter:
     def __init__(self):
         self._it = itertools.count()
 
-    def bump(self) -> None:
-        next(self._it)
+    def bump(self) -> int:
+        """Increment; returns the pre-increment value (a lock-free ticket)."""
+        return next(self._it)
 
     def value(self) -> int:
         # __reduce__ returns (count, (next_value,)); next_value == #bumps.
@@ -169,6 +170,14 @@ class ChangeDetector:
         self.ewma = EWMA(alpha)
         self.warmup = warmup
         self._n = 0
+
+    def seed(self, value: float) -> None:
+        """Pre-warm the baseline at a known level (e.g. measured during a
+        canary) so the very next observation is already change-checked —
+        without this, a regression landing inside the warmup window after a
+        promotion would silently become the new baseline."""
+        self.ewma.value = float(value)
+        self._n = self.warmup + 1
 
     def update(self, metric: float) -> bool:
         """Feed one observation; returns True if a change was detected."""

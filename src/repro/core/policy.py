@@ -52,7 +52,35 @@ class Policy:
     exploration round is complete; ``observe(config, metric)`` feeds the
     measured end-to-end metric (higher is better); ``best()`` returns the
     winner so far.
+
+    ``set_exclude(fn)`` installs a quarantine predicate: configs for which
+    ``fn(config)`` is true are never proposed and never elected by
+    ``best()`` (the safety layer uses this to keep rolled-back configs out
+    of the candidate stream).  ``decay(factor)`` is the soft counterpart of
+    ``reset()``: re-exploration after a detected change keeps a decayed
+    prior over what was already learned instead of starting from scratch,
+    so a transient blip does not throw away the incumbent's history.
     """
+
+    _exclude_fn = None
+
+    def set_exclude(self, fn) -> None:
+        """Install a predicate marking configs that must never be proposed
+        or elected (``None`` removes it)."""
+        self._exclude_fn = fn
+
+    def excluded(self, config: Config) -> bool:
+        fn = self._exclude_fn
+        return fn is not None and bool(fn(config))
+
+    def decay(self, factor: float = 0.5) -> None:
+        """Prepare for re-exploration while keeping a decayed prior.
+
+        The base implementation falls back to a full ``reset()``; policies
+        with observation state override this to shrink confidence by
+        ``factor`` instead of discarding history.
+        """
+        self.reset()
 
     def reset(self) -> None:
         raise NotImplementedError
@@ -95,11 +123,13 @@ class ScoreBoard:
         self.scores[key] = (dict(config), metric)
         del prev
 
-    def best(self) -> tuple[dict | None, float]:
-        if not self.scores:
+    def best(self, exclude=None) -> tuple[dict | None, float]:
+        entries = (self.scores.values() if exclude is None else
+                   [cm for cm in self.scores.values() if not exclude(cm[0])])
+        if not entries:
             return None, -math.inf
         # max() keeps the first of equal-metric entries in insertion order.
-        cfg, metric = max(self.scores.values(), key=lambda cm: cm[1])
+        cfg, metric = max(entries, key=lambda cm: cm[1])
         return dict(cfg), metric
 
 
@@ -124,17 +154,29 @@ class ExhaustiveSweep(Policy):
         self._queue = list(self.candidates)
         self._board = _ScoreBoard()
 
+    def decay(self, factor: float = 0.5) -> None:
+        # Re-sweep every candidate but keep the board: the incumbent's
+        # standing survives a transient blip, and best() is answerable
+        # immediately (no window where exploration has "forgotten" it).
+        self._queue = list(self.candidates)
+
     def propose(self) -> dict | None:
-        return self._queue.pop(0) if self._queue else None
+        while self._queue:
+            cfg = self._queue.pop(0)
+            if not self.excluded(cfg):
+                return cfg
+        return None
 
     def peek(self, n: int = 1) -> list[dict]:
-        return [dict(c) for c in self._queue[:n]]
+        out = [dict(c) for c in self._queue if not self.excluded(c)]
+        return out[:n]
 
     def observe(self, config: Config, metric: float) -> None:
         self._board.observe(config, metric)
 
     def best(self) -> tuple[dict | None, float]:
-        return self._board.best()
+        return self._board.best(exclude=self.excluded
+                                if self._exclude_fn is not None else None)
 
 
 class CoordinateDescent(Policy):
@@ -335,9 +377,20 @@ class ContextualBandit(Policy):
         self._proposed = 0
         self._board = ScoreBoard()
 
+    def decay(self, factor: float = 0.5) -> None:
+        # Shrink confidence, keep what was learned: pulls scale down (never
+        # below 1 for an observed arm, so means survive), the proposal
+        # budget refills, and the UCB bonus widens — re-exploration starts
+        # from a decayed prior instead of from scratch.
+        for k, n in self._pulls.items():
+            if n > 0:
+                self._pulls[k] = max(1, int(round(n * factor)))
+        self._observations = sum(self._pulls.values())
+        self._proposed = 0
+
     def _unseen(self) -> list[dict]:
         return [cfg for cfg, k in zip(self.candidates, self._keys)
-                if self._pulls[k] == 0]
+                if self._pulls[k] == 0 and not self.excluded(cfg)]
 
     def _ucb(self, key: tuple) -> float:
         n = self._pulls[key]
@@ -353,8 +406,12 @@ class ContextualBandit(Policy):
         unseen = self._unseen()
         if unseen:
             return dict(unseen[0])
+        allowed = [k for cfg, k in zip(self.candidates, self._keys)
+                   if not self.excluded(cfg)]
+        if not allowed:
+            return None
         # max() keeps the earliest candidate among UCB ties.
-        best_key = max(self._keys, key=self._ucb)
+        best_key = max(allowed, key=self._ucb)
         idx = self._keys.index(best_key)
         return dict(self.candidates[idx])
 
@@ -388,7 +445,7 @@ class ContextualBandit(Policy):
 
     def best(self) -> tuple[dict | None, float]:
         pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
-                  if self._pulls[k] > 0]
+                  if self._pulls[k] > 0 and not self.excluded(cfg)]
         if not pulled:
             return None, -math.inf
         # max() keeps the earliest candidate among equal means.
@@ -448,9 +505,21 @@ class ThompsonSampling(Policy):
         self._proposed = 0
         self._board = ScoreBoard()
 
+    def decay(self, factor: float = 0.5) -> None:
+        # Same decayed-prior contract as ContextualBandit.decay: keep means,
+        # shrink confidence (pulls, Welford spread, Beta pseudo-counts) and
+        # refill the proposal budget.
+        for k, n in self._pulls.items():
+            if n > 0:
+                self._pulls[k] = max(1, int(round(n * factor)))
+                self._m2[k] *= factor
+                self._succ[k] *= factor
+        self._observations = sum(self._pulls.values())
+        self._proposed = 0
+
     def _unseen(self) -> list[dict]:
         return [cfg for cfg, k in zip(self.candidates, self._keys)
-                if self._pulls[k] == 0]
+                if self._pulls[k] == 0 and not self.excluded(cfg)]
 
     def _pooled_std(self) -> float:
         """Pooled within-arm standard deviation (Welford M2 across arms);
@@ -477,8 +546,12 @@ class ThompsonSampling(Policy):
         unseen = self._unseen()
         if unseen:
             return dict(unseen[0])
+        allowed = [k for cfg, k in zip(self.candidates, self._keys)
+                   if not self.excluded(cfg)]
+        if not allowed:
+            return None
         # max() keeps the earliest candidate among equal draws.
-        best_key = max(self._keys, key=self._sample)
+        best_key = max(allowed, key=self._sample)
         idx = self._keys.index(best_key)
         return dict(self.candidates[idx])
 
@@ -519,7 +592,7 @@ class ThompsonSampling(Policy):
 
     def best(self) -> tuple[dict | None, float]:
         pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
-                  if self._pulls[k] > 0]
+                  if self._pulls[k] > 0 and not self.excluded(cfg)]
         if not pulled:
             return None, -math.inf
         # max() keeps the earliest candidate among equal means.
@@ -608,11 +681,23 @@ class CostAwareUCB(Policy):
             return 0.0
         return self.cost_weight * self._scale() * (est / self.dwell_s)
 
+    def decay(self, factor: float = 0.5) -> None:
+        # Decayed prior: keep means and sunk build costs (_paid), shrink
+        # pull counts and the scale estimate, refill the proposal budget.
+        old_obs = self._observations
+        for k, n in self._pulls.items():
+            if n > 0:
+                self._pulls[k] = max(1, int(round(n * factor)))
+        self._observations = sum(self._pulls.values())
+        if old_obs > 0:
+            self._abs_sum *= self._observations / old_obs
+        self._proposed = 0
+
     def _unseen(self) -> list[tuple[dict, tuple]]:
         """Unpulled arms, cheapest amortized cost first (stable by candidate
         order among ties) — exploration starts on the affordable arms."""
         unseen = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
-                  if self._pulls[k] == 0]
+                  if self._pulls[k] == 0 and not self.excluded(cfg)]
         return sorted(unseen, key=lambda ck: self._penalty(ck[0], ck[1]))
 
     def _score(self, key: tuple) -> float:
@@ -632,8 +717,12 @@ class CostAwareUCB(Policy):
         unseen = self._unseen()
         if unseen:
             return dict(unseen[0][0])
+        allowed = [k for cfg, k in zip(self.candidates, self._keys)
+                   if not self.excluded(cfg)]
+        if not allowed:
+            return None
         # max() keeps the earliest candidate among score ties.
-        best_key = max(self._keys, key=self._score)
+        best_key = max(allowed, key=self._score)
         idx = self._keys.index(best_key)
         return dict(self.candidates[idx])
 
@@ -669,7 +758,7 @@ class CostAwareUCB(Policy):
 
     def best(self) -> tuple[dict | None, float]:
         pulled = [(cfg, k) for cfg, k in zip(self.candidates, self._keys)
-                  if self._pulls[k] > 0]
+                  if self._pulls[k] > 0 and not self.excluded(cfg)]
         if not pulled:
             return None, -math.inf
         # max() keeps the earliest candidate among equal means.

@@ -234,19 +234,34 @@ class _Snapshot:
     on, and — when none of the slow-path features apply — the bound
     ``variant.call`` to jump straight to.  ``ready=False`` (argument specs
     not captured yet) forces the slow path by leaving ``fast`` unset.
+
+    ``canary`` is the second dispatch slot: a candidate variant admitted to
+    a slice of live traffic (every ``canary_period``-th call) before full
+    activation.  ``tap`` marks that a shadow-evaluation tap wants to see
+    live call arguments.  Either forces the slow path.
     """
 
-    __slots__ = ("variant", "generic", "guard_fn", "sample", "fast")
+    __slots__ = ("variant", "generic", "guard_fn", "sample", "fast",
+                 "canary", "canary_guard", "canary_period", "tap")
 
     def __init__(self, variant: Variant, generic: Variant,
-                 instr_rate: float, ready: bool = True):
+                 instr_rate: float, ready: bool = True,
+                 canary: Variant | None = None, canary_period: int = 0,
+                 tap: bool = False):
         self.variant = variant
         self.generic = generic
         self.guard_fn = (variant.specialized.guard_fn
                          if variant is not generic else None)
         self.sample = instr_rate > 0.0
+        self.canary = canary
+        self.canary_guard = (canary.specialized.guard_fn
+                             if canary is not None and canary is not generic
+                             else None)
+        self.canary_period = max(1, int(canary_period)) if canary else 0
+        self.tap = tap
         self.fast = (variant.call
                      if ready and self.guard_fn is None and not self.sample
+                     and canary is None and not tap
                      and not variant.specialized.instrumented else None)
 
 
@@ -258,7 +273,9 @@ class _Context:
 
     __slots__ = ("key", "variants", "active_key", "generic_key", "arg_specs",
                  "need_arg_specs", "epoch", "snapshot", "tput",
-                 "guard_misses", "window", "instr_rate")
+                 "guard_misses", "window", "instr_rate", "canary_key",
+                 "canary_period", "canary_epoch", "canary_ticker",
+                 "canary_calls")
 
     def __init__(self, key: Any, tput: ThroughputCounter):
         self.key = key
@@ -275,6 +292,12 @@ class _Context:
         self.window = ThroughputWindow()
         #: host-side sampling rate while this context is instrumented
         self.instr_rate = 0.0
+        #: canary slot: candidate variant serving 1/canary_period of calls
+        self.canary_key: tuple | None = None
+        self.canary_period = 0
+        self.canary_epoch = 0                  # supersedes stale canary builds
+        self.canary_ticker = AtomicCounter()
+        self.canary_calls = AtomicCounter()
 
 
 class ContextView:
@@ -317,6 +340,34 @@ class ContextView:
 
     def active_config(self) -> dict:
         return self.handler.active_config(context=self.key)
+
+    # -- safe exploration (see the Handler methods for semantics) ---------------
+    def build(self, config: Config, wait: bool = False):
+        return self.handler.build(config, context=self.key, wait=wait)
+
+    def shadow_call(self, config: Config, args: tuple = (),
+                    kwargs: dict | None = None):
+        return self.handler.shadow_call(config, args, kwargs,
+                                        context=self.key)
+
+    def set_canary(self, config: Config, fraction: float,
+                   wait: bool = False) -> None:
+        self.handler.set_canary(config, fraction, context=self.key, wait=wait)
+
+    def clear_canary(self) -> None:
+        self.handler.clear_canary(context=self.key)
+
+    def canary_config(self) -> dict | None:
+        return self.handler.canary_config(context=self.key)
+
+    def canary_calls(self) -> int:
+        return self.handler.canary_calls(context=self.key)
+
+    def promote_canary(self, wait: bool = False) -> dict | None:
+        return self.handler.promote_canary(context=self.key, wait=wait)
+
+    def revert_to(self, config: Config, wait: bool = True) -> None:
+        self.handler.revert_to(config, context=self.key, wait=wait)
 
     def enable_instrumentation(self, rate: float = 1.0,
                                collectors: Mapping[str, Callable] | None = None,
@@ -391,6 +442,9 @@ class Handler:
         self.recorders = instr_mod.RecorderSet()
         self._instr_rate = 0.0
         self._guard_miss_counter = AtomicCounter()
+        #: shadow-evaluation tap: fn(ctx_key, args, kwargs), called on the
+        #: slow path so an evaluator can mirror live arguments off-path
+        self._shadow_tap: Callable[[Any, tuple, dict], None] | None = None
         # Mirrors of the default context's dispatch state (the contextless
         # fast path reads these; tests assert on them).
         self._snapshot: _Snapshot | None = None
@@ -565,8 +619,15 @@ class Handler:
     def _rebuild_snapshot_locked(self, ctx: _Context) -> None:
         variant = ctx.variants[ctx.active_key]
         generic = ctx.variants[ctx.generic_key]
+        canary = (ctx.variants.get(ctx.canary_key)
+                  if ctx.canary_key is not None else None)
+        if canary is variant:
+            canary = None                      # promoting made it the active
         ctx.snapshot = _Snapshot(variant, generic, ctx.instr_rate,
-                                 ready=not ctx.need_arg_specs)
+                                 ready=not ctx.need_arg_specs,
+                                 canary=canary,
+                                 canary_period=ctx.canary_period,
+                                 tap=self._shadow_tap is not None)
         if ctx.key == DEFAULT_CONTEXT:
             # Mirror for the contextless fast path (and legacy callers).
             self._snapshot = ctx.snapshot
@@ -709,6 +770,157 @@ class Handler:
         if wait:
             self.runtime.compile_service.drain(self.name)
 
+    # -- safe exploration surface (shadow + canary + rollback) -------------------
+    def build(self, config: Config, context: Any = None,
+              wait: bool = False) -> concurrent.futures.Future:
+        """Build a variant for ``config`` *without* activating it.
+
+        Unlike :meth:`prefetch` the request is non-speculative, so a
+        synchronous runtime (``workers=0``) builds it inline instead of
+        skipping it — shadow evaluation needs the variant to exist even
+        when there is no compile pipeline to overlap with.
+        """
+        self.space.validate({k: v for k, v in config.items() if k in self.space})
+        ctx = self._ctx(context)
+        fut = self._install(ctx, config, wait=False, activate=False)
+        if wait and not fut.cancelled():
+            try:
+                fut.result()
+            except concurrent.futures.CancelledError:
+                pass
+        return fut
+
+    def shadow_call(self, config: Config, args: tuple = (),
+                    kwargs: dict | None = None, context: Any = None):
+        """Invoke the built variant for ``config`` directly, bypassing the
+        dispatch snapshot: no activation, no tput accounting, no guards.
+        This is how a shadow evaluator re-executes mirrored live calls
+        against a candidate off the hot path.  Raises ``LookupError`` if the
+        variant has not been built yet (see :meth:`build`)."""
+        ctx = self._ctx(context)
+        key = (ctx.key, config_key(config), False)
+        with self._lock:
+            variant = ctx.variants.get(key)
+        if variant is None:
+            raise LookupError(
+                f"no built variant for {dict(config)!r} in context "
+                f"{ctx.key!r} of handler {self.name!r}")
+        return variant.call(*args, **(kwargs or {}))
+
+    def set_shadow_tap(self,
+                       fn: Callable[[Any, tuple, dict], None] | None) -> None:
+        """Install (or, with ``None``, remove) the shadow tap: every live
+        call takes the slow path and ``fn(ctx_key, args, kwargs)`` sees its
+        arguments before dispatch, so an evaluator can mirror real traffic.
+        Costs the fast path while installed; remove it when not shadowing."""
+        with self._lock:
+            self._shadow_tap = fn
+            for ctx in self._contexts.values():
+                if ctx.snapshot is not None:
+                    self._rebuild_snapshot_locked(ctx)
+
+    def clear_shadow_tap(self) -> None:
+        self.set_shadow_tap(None)
+
+    def set_canary(self, config: Config, fraction: float,
+                   context: Any = None, wait: bool = False) -> None:
+        """Admit ``config`` to a slice of live traffic (the second dispatch
+        slot): every ``round(1/fraction)``-th call in this context routes to
+        the candidate variant while the incumbent keeps serving the rest.
+        The build happens off-path; the canary starts serving only once the
+        variant exists.  A newer ``set_canary``/``clear_canary`` supersedes
+        an in-flight one."""
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"canary fraction must be in (0, 1]: {fraction}")
+        self.space.validate({k: v for k, v in config.items() if k in self.space})
+        ctx = self._ctx(context)
+        key = (ctx.key, config_key(config), False)
+        period = max(1, round(1.0 / fraction))
+        with self._lock:
+            ctx.canary_epoch += 1
+            token = ctx.canary_epoch
+            ctx.canary_period = period
+        fut = self._install(ctx, config, wait=False, activate=False)
+
+        def _arm(f: concurrent.futures.Future) -> None:
+            if f.cancelled() or f.exception() is not None:
+                return
+            with self._lock:
+                if ctx.canary_epoch != token:
+                    return                     # superseded while building
+                ctx.canary_key = key
+                self._rebuild_snapshot_locked(ctx)
+
+        fut.add_done_callback(_arm)
+        if wait and not fut.cancelled():
+            try:
+                fut.result()
+            except concurrent.futures.CancelledError:
+                pass
+
+    def clear_canary(self, context: Any = None) -> None:
+        """Withdraw the canary slot; the incumbent serves all traffic again."""
+        ctx = self._ctx(context)
+        with self._lock:
+            ctx.canary_epoch += 1
+            if ctx.canary_key is None:
+                return
+            ctx.canary_key = None
+            ctx.canary_period = 0
+            self._rebuild_snapshot_locked(ctx)
+
+    def canary_config(self, context: Any = None) -> dict | None:
+        """The config currently holding the canary slot, or ``None``."""
+        ctx = self._ctx(context)
+        with self._lock:
+            if ctx.canary_key is None:
+                return None
+            variant = ctx.variants.get(ctx.canary_key)
+            return dict(variant.config) if variant is not None else None
+
+    def canary_calls(self, context: Any = None) -> int:
+        """Live calls served by canary variants in this context (lifetime)."""
+        return self._ctx(context).canary_calls.value()
+
+    def promote_canary(self, context: Any = None,
+                       wait: bool = False) -> dict | None:
+        """Promote the canary to full activation: one atomic swap makes the
+        candidate the active variant and empties the canary slot.  Returns
+        the promoted config, or ``None`` if no canary was armed."""
+        ctx = self._ctx(context)
+        with self._lock:
+            variant = (ctx.variants.get(ctx.canary_key)
+                       if ctx.canary_key is not None else None)
+            ctx.canary_epoch += 1
+            ctx.canary_key = None
+            ctx.canary_period = 0
+            if variant is None:
+                if ctx.snapshot is not None and ctx.snapshot.canary is not None:
+                    self._rebuild_snapshot_locked(ctx)
+                return None
+            cfg = dict(variant.config)
+        # The variant exists, so this publishes (and clears the slot in the
+        # same snapshot swap) without any compile.
+        self._install(ctx, cfg, wait=wait, activate=True)
+        return cfg
+
+    def revert_to(self, config: Config, context: Any = None,
+                  wait: bool = True) -> None:
+        """Atomically revert the context to ``config`` (the auto-rollback
+        path): the canary slot is emptied, still-queued builds for this
+        context are cancelled, any in-flight activation is superseded by a
+        fresh epoch, and — since a last-known-good config's variant is
+        already built — the swap itself is a synchronous publish."""
+        self.space.validate({k: v for k, v in config.items() if k in self.space})
+        ctx = self._ctx(context)
+        with self._lock:
+            ctx.canary_epoch += 1
+            ctx.canary_key = None
+            ctx.canary_period = 0
+        self.runtime.compile_service.cancel_pending(
+            self.name, key_filter=lambda k: k[0] == ctx.key)
+        self._install(ctx, config, wait=wait, activate=True)
+
     def enable_instrumentation(self, rate: float = 1.0,
                                collectors: Mapping[str, Callable] | None = None,
                                wait: bool = True, context: Any = None) -> None:
@@ -793,12 +1005,17 @@ class Handler:
             for ctx in ctxs:
                 active = (ctx.variants.get(ctx.active_key)
                           if ctx.active_key is not None else None)
+                canary = (ctx.variants.get(ctx.canary_key)
+                          if ctx.canary_key is not None else None)
                 per_context[encode_context_key(ctx.key)] = {
                     "variants": len(ctx.variants),
                     "calls": ctx.tput.total(),
                     "guard_misses": ctx.guard_misses.value(),
                     "active": (dict(active.config)
                                if active is not None else None),
+                    "canary": (dict(canary.config)
+                               if canary is not None else None),
+                    "canary_calls": ctx.canary_calls.value(),
                     "tput_window": ctx.window.summary(),
                 }
             default = self._contexts.get(DEFAULT_CONTEXT)
@@ -895,10 +1112,25 @@ class Handler:
             # warm restarts can load their cached executables).
             self._capture_arg_specs(ctx, args, kwargs)
             snap = ctx.snapshot
+        if snap.tap:
+            tap = self._shadow_tap
+            if tap is not None:
+                try:
+                    tap(ctx.key, args, kwargs)
+                except Exception:       # never let evaluation break dispatch
+                    logger.exception("shadow tap failed for %r", self.name)
         variant = snap.variant
+        guard_fn = snap.guard_fn
+        # Canary slot: route every canary_period-th call to the candidate
+        # variant (lock-free ticket; deterministic 1/period traffic slice).
+        if snap.canary is not None and \
+                ctx.canary_ticker.bump() % snap.canary_period == 0:
+            variant = snap.canary
+            guard_fn = snap.canary_guard
+            ctx.canary_calls.bump()
         # Host-side specialization guards (paper §4.4.3): on miss, fall back
         # to the generic variant for this invocation.
-        if snap.guard_fn is not None and not snap.guard_fn(args, kwargs):
+        if guard_fn is not None and not guard_fn(args, kwargs):
             variant._guard_misses.bump()
             ctx.guard_misses.bump()
             self._guard_miss_counter.bump()

@@ -89,6 +89,8 @@ _ENGINE_FLAGS = (
     ("--queue-depth", "queue_depth"), ("--shed-policy", "shed_policy"),
     ("--scheduler", "scheduler"), ("--bucket-dwell", "bucket_dwell"),
     ("--kv-dwell", "kv_dwell"), ("--seed", "seed"),
+    ("--shadow-frac", "shadow_frac"), ("--canary-frac", "canary_frac"),
+    ("--promote-after", "promote_after"),
 )
 
 
@@ -142,6 +144,20 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--kv-dwell", type=int, default=25,
                     help="engine steps per KV-geometry candidate")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shadow-frac", type=float, default=0.25,
+                    help="fraction of live calls mirrored for shadow "
+                         "evaluation (0 disables shadowing; candidates "
+                         "then go straight to canary)")
+    ap.add_argument("--canary-frac", type=float, default=0.1,
+                    help="slice of a context's live traffic a "
+                         "shadow-passed candidate serves during canary "
+                         "probation")
+    ap.add_argument("--promote-after", type=int, default=2,
+                    help="consecutive in-SLO canary dwells required "
+                         "before a candidate is promoted")
+    ap.add_argument("--no-safety", action="store_true",
+                    help="disable shadow/canary/rollback and run the "
+                         "plain Controller (pre-safety behavior)")
 
 
 def build_engine(args) -> SimpleNamespace:
@@ -151,15 +167,18 @@ def build_engine(args) -> SimpleNamespace:
     import jax
 
     from repro import configs
-    from repro.checkpoint import restore_spec_state
+    from repro.checkpoint import load_safety_state, restore_spec_state
     from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
-                            IridescentRuntime, VariantCache)
+                            IridescentRuntime, Quarantine, SafetyController,
+                            VariantCache)
+    from repro.core.runtime import decode_context_key
     from repro.models import transformer as model
     from repro.models.transformer import RunOptions
     from repro.serve import (AdmissionQueue, BucketTuner, ContinuousBatcher,
                              KVTuner, PagedKV, PhasedExecutor, ServeEngine,
-                             ServeMetrics, bucket_plan_builder,
-                             kv_plan_builder, make_scheduler)
+                             ServeMetrics, ShadowEvaluator,
+                             bucket_plan_builder, kv_plan_builder,
+                             make_scheduler)
     from repro.serve.batcher import BUCKET_POINT
     from repro.serve.kv import KV_LAYOUT_POINT, KV_PAGE_POINT
     from repro.training import make_serve_builder, phase_context_fn
@@ -217,11 +236,35 @@ def build_engine(args) -> SimpleNamespace:
     space = handler.spec_space()
     labels = ["cache_dtype", "rmsnorm_impl"] + (
         ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
-    controller = Controller(
-        handler,
-        lambda: ExhaustiveSweep.from_space(space, labels),
+    policy_factory = lambda: ExhaustiveSweep.from_space(space, labels)
+    controller_kwargs = dict(
         dwell=args.dwell, change_detector=lambda: ChangeDetector(0.3),
         wait_compiles=False, prefetch=args.prefetch, budget=args.budget)
+    shadow = None
+    if getattr(args, "no_safety", False):
+        # Pre-safety behavior: candidates serve live traffic directly and
+        # a detected change restarts exploration without rollback.
+        controller = Controller(handler, policy_factory, **controller_kwargs)
+    else:
+        shadow_frac = getattr(args, "shadow_frac", 0.25)
+        if shadow_frac and shadow_frac > 0:
+            shadow = ShadowEvaluator(handler, sample_frac=shadow_frac)
+        # Warm-start the safety plane from the previous run's v3 state:
+        # last-known-good configs seed rollback targets; quarantined
+        # configs are blocked before the first proposal.
+        safety_init = (load_safety_state(spec_state_path).get(
+            "serve_step", {}) if spec_state_path else {})
+        quarantine = Quarantine()
+        for enc, cfgs in (safety_init.get("quarantined") or {}).items():
+            for q in cfgs:
+                quarantine.add("serve_step", decode_context_key(enc), q)
+        controller = SafetyController(
+            handler, policy_factory, shadow=shadow,
+            canary_frac=getattr(args, "canary_frac", 0.1),
+            promote_after=getattr(args, "promote_after", 2),
+            quarantine=quarantine,
+            initial_last_known_good=safety_init.get("last_known_good"),
+            **controller_kwargs)
 
     slo_s = args.slo_ms / 1e3
     metrics = ServeMetrics(slo_s=slo_s)
@@ -236,12 +279,13 @@ def build_engine(args) -> SimpleNamespace:
         handler, controller, batcher, make_scheduler(args.scheduler),
         executor=executor,
         queue=AdmissionQueue(depth=args.queue_depth, policy=args.shed_policy),
-        tuner=tuner, kv_tuner=kv_tuner, metrics=metrics, slo_s=slo_s)
+        tuner=tuner, kv_tuner=kv_tuner, metrics=metrics, slo_s=slo_s,
+        shadow=shadow)
     return SimpleNamespace(
         rt=rt, engine=engine, handler=handler, controller=controller,
         batcher=batcher, tuner=tuner, kv_tuner=kv_tuner, kv=kv,
         metrics=metrics, restored=restored, initial_scheme=initial_scheme,
-        initial_plan=initial_plan)
+        initial_plan=initial_plan, shadow=shadow)
 
 
 def _run_single(args) -> None:
@@ -254,7 +298,9 @@ def _run_single(args) -> None:
         print(f"restored spec state: bucket scheme={built.initial_scheme}, "
               f"kv plan={built.initial_plan}, "
               f"seeded contexts={list(built.handler._seeded)}")
-    plane = (SpecPlane(args.plane_dir, replica=args.replica_id)
+    plane = (SpecPlane(args.plane_dir, replica=args.replica_id,
+                       quarantine=getattr(built.controller, "quarantine",
+                                          None))
              if args.plane_dir else None)
     if plane is not None and plane.poll(rt):
         # Warm start off the fleet plane: remotely settled (phase, bucket)
@@ -287,6 +333,14 @@ def _run_single(args) -> None:
                  for k, cfg in built.controller.best_configs().items()}
     print(f"per-context configs: {json.dumps(best_cfgs)}")
     print(f"compile stats: {json.dumps(rt.compile_stats())}")
+    status_fn = getattr(built.controller, "safety_status", None)
+    if callable(status_fn):
+        st = status_fn()
+        print(f"safety: promotions={st['promotions']} "
+              f"rollbacks={st['rollbacks']} "
+              f"shadow_rejections={st['shadow_rejections']} "
+              f"canary_rejections={st['canary_rejections']} "
+              f"quarantined={st['quarantined']}")
     if plane is not None:
         n = plane.publish_controller("serve_step", built.controller)
         print(f"plane: published {n} settled winners")
@@ -309,6 +363,8 @@ def _run_fleet(args) -> None:
             passthrough += [flag, str(v)]
     if args.portable_cache:
         passthrough.append("--portable-cache")
+    if args.no_safety:
+        passthrough.append("--no-safety")
     env = worker_env()
     replicas = []
     for i in range(args.replicas):

@@ -33,6 +33,7 @@ from repro.serve.kv import (KVTuner, PagedKV, PageError, PagePool, PageTable,
 from repro.serve.executor import (DecodeExecutor, PhasedExecutor,
                                   PrefillExecutor)
 from repro.serve.engine import BatchExecutor, ServeEngine
+from repro.serve.shadow import ShadowEvaluator
 
 __all__ = [
     "Completion", "Request", "next_request_id",
@@ -45,5 +46,5 @@ __all__ = [
     "KVTuner", "PagedKV", "PageError", "PagePool", "PageTable",
     "kv_plan_builder",
     "DecodeExecutor", "PhasedExecutor", "PrefillExecutor",
-    "BatchExecutor", "ServeEngine",
+    "BatchExecutor", "ServeEngine", "ShadowEvaluator",
 ]

@@ -92,6 +92,7 @@ class ServeEngine:
         max_batch: int = 8,
         clock: Callable[[], float] = time.perf_counter,
         on_completion: Callable[[Completion], None] | None = None,
+        shadow=None,                         # repro.serve.shadow.ShadowEvaluator
     ):
         if executor is None:
             raise ValueError("ServeEngine needs an executor (the adapter "
@@ -114,10 +115,14 @@ class ServeEngine:
         #: phased executors partition steps into prefill and decode
         self.phased = bool(getattr(executor, "phased", False))
         self.on_completion = on_completion
+        #: optional shadow evaluator: candidates re-execute mirrored live
+        #: calls on idle ticks (off the hot path, bounded per-tick budget)
+        self.shadow = shadow
         #: requests currently in the running batch, in slot order
         self.active: list[Request] = []
         self.steps = 0
         self.idle_ticks = 0
+        self.shadow_pairs = 0
         self.tokens_generated = 0
         self.padded_rows = 0            # wasted rows (padding) across steps
         self.bucket_steps: dict[int, int] = {}
@@ -144,6 +149,14 @@ class ServeEngine:
                                   now, slo_s=self.slo_s, phased=self.phased)
         if not batch.requests:
             self.idle_ticks += 1
+            if self.shadow is not None:
+                # Idle capacity funds shadow evaluation: mirrored call
+                # pairs run off the hot path under a bounded per-tick
+                # budget, then the controller collects any verdicts (a
+                # shadow-stage context advances without live traffic).
+                self.shadow_pairs += self.shadow.step()
+                if self.controller is not None:
+                    self.controller.step()
             return 0
         self.active = list(batch.all_rows)
         produced = self.executor.execute(batch)
@@ -268,8 +281,30 @@ class ServeEngine:
         if state_dir is not None:
             from repro.checkpoint import save_spec_state
             save_spec_state(os.path.join(state_dir, "spec_state.json"),
-                            runtime, keep=self._spec_state_filter())
+                            runtime, keep=self._spec_state_filter(),
+                            safety=self._safety_state())
+        if self.shadow is not None:
+            self.shadow.close()
         runtime.shutdown()
+
+    def _safety_state(self) -> dict | None:
+        """Per-handler safety payload for ``save_spec_state`` (v3): any
+        controller exposing ``safety_state()`` (the SafetyController)
+        contributes its last-known-good and quarantine maps."""
+        out = {}
+        pairs = [(self.handler.name, self.controller)]
+        if self.tuner is not None:
+            pairs.append((self.tuner.handler.name, self.tuner.controller))
+        if self.kv_tuner is not None:
+            pairs.append((self.kv_tuner.handler.name,
+                          self.kv_tuner.controller))
+        for name, ctl in pairs:
+            fn = getattr(ctl, "safety_state", None)
+            if callable(fn):
+                state = fn()
+                if state.get("last_known_good") or state.get("quarantined"):
+                    out[name] = state
+        return out or None
 
     def _spec_state_filter(self):
         """``keep(handler, encoded_key)`` predicate: drop contexts whose
@@ -310,6 +345,12 @@ class ServeEngine:
             out["buckets"] = self.tuner.status()
         if self.kv_tuner is not None:
             out["kv"] = self.kv_tuner.status()
+        if self.shadow is not None:
+            out["shadow"] = {"pairs": self.shadow_pairs,
+                             **self.shadow.stats()}
+        fn = getattr(self.controller, "safety_status", None)
+        if callable(fn):
+            out["safety"] = fn()
         return out
 
 

@@ -245,6 +245,9 @@ def main(argv=None) -> None:
     ap.add_argument("--plane-dir", default=None,
                     help="shared SpecPlane directory (publish + subscribe)")
     ap.add_argument("--plane-poll-s", type=float, default=0.25)
+    ap.add_argument("--plane-gc-s", type=float, default=0.0,
+                    help="reclaim plane records older than this (superseded"
+                         " epochs, retired contexts); 0 disables")
     ap.add_argument("--max-wall-s", type=float, default=300.0,
                     help="hard serve-loop wall cap (CI hang guard)")
     if ns.profile == "lm":
@@ -266,7 +269,13 @@ def main(argv=None) -> None:
     rt, engine, publishable = (_synthetic_stack(args)
                                if args.profile == "synthetic"
                                else _lm_stack(args))
-    plane = (SpecPlane(args.plane_dir, replica=args.replica_id)
+    # Share the controller's quarantine registry with the plane so local
+    # rollbacks propagate fleet-wide and remote ones are absorbed here.
+    quarantine = next((ctl.quarantine for _, ctl in publishable
+                       if getattr(ctl, "quarantine", None) is not None),
+                      None)
+    plane = (SpecPlane(args.plane_dir, replica=args.replica_id,
+                       quarantine=quarantine)
              if args.plane_dir else None)
     if plane is not None:
         # Warm start: remotely settled winners seed the handlers *before*
@@ -328,6 +337,12 @@ def main(argv=None) -> None:
             plane.poll(rt)
             for name, ctl in publishable:
                 plane.publish_controller(name, ctl)
+            if args.plane_gc_s > 0:
+                from repro.core.runtime import encode_context_key
+                active = {(name, encode_context_key(k))
+                          for name, ctl in publishable
+                          for k in ctl.contexts()}
+                plane.gc(args.plane_gc_s, active=active)
             last_plane = now
         if closed.is_set() and not engine.active and not len(engine.queue):
             break

@@ -191,7 +191,7 @@ def test_spec_state_roundtrip_per_context(tmp_path):
 
     with open(path) as f:
         raw = json.load(f)
-    assert raw["version"] == 2
+    assert raw["version"] == 3
     assert encode_context_key(4) in raw["handlers"]["m"]["contexts"]
 
     # fresh process: restore seeds the non-default contexts; the moment

@@ -244,7 +244,7 @@ def test_unknown_spec_state_version_not_misparsed(tmp_path):
     from repro.checkpoint import restore_spec_state
     path = str(tmp_path / "spec_state.json")
     with open(path, "w") as f:
-        _json.dump({"version": 3, "handlers": {"m": {"contexts": {}}}}, f)
+        _json.dump({"version": 99, "handlers": {"m": {"contexts": {}}}}, f)
     rt = make_rt()
     h = rt.register("m", _mm_builder)
     assert restore_spec_state(path, rt, wait=True) is False
