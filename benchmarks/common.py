@@ -21,7 +21,7 @@ def measure_dispatch_overhead(iters: int = 500) -> dict:
     methodology.
     """
     import jax.numpy as jnp
-    from repro.core import IridescentRuntime
+    from repro.core import IridescentRuntime, telemetry
 
     rt = IridescentRuntime(async_compile=False)
     try:
@@ -35,6 +35,14 @@ def measure_dispatch_overhead(iters: int = 500) -> dict:
         h.count_calls = False
         us_fast_nocount = time_fn(h, x, iters=iters)
         h.count_calls = True
+        # Flight-recorder cost on the fast path: the dispatch fast path is
+        # deliberately uninstrumented, so both readings should sit within
+        # noise of trampoline_fast — off *and* on.
+        prev_bus = telemetry.install(None)
+        us_tel_off = time_fn(h, x, iters=iters)
+        telemetry.install(telemetry.EventBus(4096))
+        us_tel_on = time_fn(h, x, iters=iters)
+        telemetry.install(prev_bus)
         # Per-request context routing: a realistic shape-classifying
         # context_fn, routed through the immutable context map.
         hc = rt.register("micro_ctx", lambda spec: (lambda x: x * x),
@@ -46,6 +54,8 @@ def measure_dispatch_overhead(iters: int = 500) -> dict:
             "trampoline_fast": round(us_fast, 3),
             "trampoline_fast_nocount": round(us_fast_nocount, 3),
             "trampoline_contextual": round(us_ctx, 3),
+            "trampoline_telemetry_off": round(us_tel_off, 3),
+            "trampoline_telemetry_on": round(us_tel_on, 3),
             "overhead": round(us_fast - us_direct, 3),
             "contextual_overhead": round(us_ctx - us_fast, 3),
         }

@@ -38,6 +38,13 @@ def run() -> list[Row]:
     rows.append(Row("fig11/dispatch_contextual", d["trampoline_contextual"],
                     f"+{d['contextual_overhead']:.2f}us per-request context "
                     f"routing (context_fn + snapshot-map probe)"))
+    rows.append(Row("fig11/dispatch_telemetry_off",
+                    d["trampoline_telemetry_off"],
+                    "flight recorder disabled: fast path uninstrumented"))
+    rows.append(Row("fig11/dispatch_telemetry_on",
+                    d["trampoline_telemetry_on"],
+                    "flight recorder enabled: fast path still "
+                    "uninstrumented (events come from slow paths)"))
     for rate in (0.0, 0.01, 0.1, 1.0):
         rt = IridescentRuntime(async_compile=False)
         h = rt.register("f", fb)

@@ -942,11 +942,15 @@ def run_fleet(replicas: int = 2, n_requests: int = 48, rate: float = 40.0,
     cache_dir = os.path.join(root, "cache")
 
     def spawn(replica_id: str) -> SubprocessReplica:
+        from repro.core import telemetry
         cmd = worker_command(
             "--profile", "synthetic", "--replica-id", replica_id,
             "--plane-dir", plane_dir, "--plane-poll-s", "0.2",
             "--cache-dir", cache_dir, "--d", str(d), "--dwell", str(dwell),
-            "--slo-ms", str(slo_ms), "--max-wall-s", "120")
+            "--slo-ms", str(slo_ms), "--max-wall-s", "120",
+            # with the front's flight recorder on, workers forward their
+            # event streams for one merged per-replica trace
+            *(("--telemetry",) if telemetry.bus() is not None else ()))
         return SubprocessReplica(cmd, name=replica_id)
 
     def drive(sink, schedule) -> float:
@@ -1456,7 +1460,13 @@ def main() -> None:
                     help="routing policy for the fleet scenario "
                          "(round-robin | jsq | spill)")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the flight-recorder bus for the run and "
+                         "write its stream as Chrome-trace JSON here")
     args = ap.parse_args()
+    if args.trace_out:
+        from repro.core import telemetry
+        telemetry.enable()
     result: dict = {}
     if args.scenario != "all" and os.path.exists(args.out):
         try:
@@ -1483,6 +1493,13 @@ def main() -> None:
     if args.scenario in ("all", "safety"):
         result["safety"] = run_safety()
     write_json(args.out, result)
+    if args.trace_out:
+        from repro.core import telemetry
+        _tb = telemetry.bus()
+        if _tb is not None:
+            doc = telemetry.export_chrome_trace(_tb.events(), args.trace_out)
+            print(f"trace: wrote {len(doc['traceEvents'])} events to "
+                  f"{args.trace_out} ({json.dumps(_tb.stats())})")
     print(json.dumps(result, indent=1, sort_keys=True))
 
 

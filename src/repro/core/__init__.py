@@ -40,7 +40,8 @@ from repro.core.safety import CanaryGate, Quarantine, SafetyController
 from repro.core.metrics import (AtomicCounter, ChangeDetector, EWMA,
                                 StepTimer, ThroughputCounter,
                                 ThroughputWindow)
-from repro.core import fastpath, guards, instrumentation
+from repro.core import fastpath, guards, instrumentation, telemetry
+from repro.core.telemetry import EventBus, export_chrome_trace
 
 __all__ = [
     "DISABLED", "AssumePoint", "Config", "CustomPoint", "EnumPoint",
@@ -55,5 +56,6 @@ __all__ = [
     "CanaryGate", "Quarantine", "SafetyController",
     "AtomicCounter", "ChangeDetector", "EWMA",
     "StepTimer", "ThroughputCounter", "ThroughputWindow", "fastpath",
-    "guards", "instrumentation",
+    "guards", "instrumentation", "telemetry", "EventBus",
+    "export_chrome_trace",
 ]

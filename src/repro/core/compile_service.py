@@ -38,6 +38,9 @@ import time
 from concurrent.futures import CancelledError, Future
 from typing import Any, Callable
 
+from . import telemetry
+from .metrics import nearest_rank
+
 logger = logging.getLogger("repro.core.compile_service")
 
 __all__ = ["CompileService", "CompileRequest",
@@ -163,6 +166,11 @@ class CompileService:
                 self._inflight[(handler, key)] = req
                 heapq.heappush(self._heap, (priority, next(self._seq), req))
                 self._cv.notify()
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("compile.queued", handler=handler,
+                         config=repr(config), speculative=speculative,
+                         priority=priority, queue_depth=len(self._heap))
         if self.workers == 0:
             self._run(req)               # synchronous inline execution
         return req
@@ -208,6 +216,12 @@ class CompileService:
                 cancelled.append(req)
             if cancelled:
                 self._cv.notify_all()
+        _tb = telemetry.bus()
+        if _tb is not None:
+            for req in cancelled:
+                _tb.emit("compile.cancelled", handler=req.handler,
+                         config=repr(req.config),
+                         speculative=req.speculative)
         return len(cancelled)
 
     # -- waiting ----------------------------------------------------------------
@@ -311,19 +325,55 @@ class CompileService:
         return agg_total / agg_n if agg_n else None
 
     def stats(self) -> dict:
+        """Aggregate counters plus the live-service view `status.py` and
+        the serve-bench report share: queue depth, in-flight builds, cache
+        hit-rate, and the p50 of observed build/compile times (from the
+        same bounded ``_history`` that feeds table4)."""
         with self._lock:
             pending = sum(1 for r in self._inflight.values()
                           if r.status == "pending")
             running = sum(1 for r in self._inflight.values()
                           if r.status == "running")
-            return {**self._agg, "workers": self.workers,
-                    "pending": pending, "running": running,
-                    "completed": len(self._history)}
+            agg = dict(self._agg)
+            records = [dict(r) for r in self._history]
+        done = [r for r in records if r.get("status") == "done"]
+        builds = [r["build_s"] for r in done if r.get("build_s") is not None]
+        compiles = [r["compile_s"] for r in done
+                    if r.get("compile_s") is not None
+                    and not r.get("cache_hit")]
+        built = agg["xla_compiles"] + agg["cache_hits"]
+        p50_build = nearest_rank(builds, 50) if builds else None
+        p50_compile = nearest_rank(compiles, 50) if compiles else None
+        return {**agg, "workers": self.workers,
+                "pending": pending, "running": running,
+                "completed": len(records),
+                "queue_depth": pending, "in_flight": running,
+                "cache_hit_rate": (round(agg["cache_hits"] / built, 4)
+                                   if built else None),
+                "build_p50_s": (round(p50_build, 6)
+                                if p50_build is not None else None),
+                "compile_p50_s": (round(p50_compile, 6)
+                                  if p50_compile is not None else None)}
 
     # -- internals ---------------------------------------------------------------
+    def _emit_build(self, req: CompileRequest, span_ts: float) -> None:
+        _tb = telemetry.bus()
+        if _tb is None:
+            return
+        rec = req.record()
+        done_t = req.done_t if req.done_t is not None else time.perf_counter()
+        _tb.emit("compile.build", "span", ts=span_ts,
+                 dur=(done_t - req.started_t) * 1e6,
+                 handler=req.handler, config=repr(req.config),
+                 status=req.status, cache_hit=req.cache_hit,
+                 speculative=req.speculative,
+                 wait_s=round(rec["wait_s"], 6),
+                 compile_s=req.compile_time_s, build_s=req.build_time_s)
+
     def _run(self, req: CompileRequest) -> None:
         req.started_t = time.perf_counter()
         req.status = "running"
+        span_ts = telemetry.perf_to_us(req.started_t)
         try:
             result = req.build()
             req.status = "done"
@@ -334,6 +384,7 @@ class CompileService:
                 self._inflight.pop((req.handler, req.key), None)
                 self._history.append(req.record())
                 self._cv.notify_all()
+            self._emit_build(req, span_ts)
             req.future.set_exception(e)
             return
         req.done_t = time.perf_counter()
@@ -345,6 +396,7 @@ class CompileService:
             self._inflight.pop((req.handler, req.key), None)
             self._history.append(req.record())
             self._cv.notify_all()
+        self._emit_build(req, span_ts)
         req.future.set_result(result)
 
     def _worker(self) -> None:

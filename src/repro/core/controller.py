@@ -40,6 +40,7 @@ import math
 import time
 from typing import Any, Callable, Mapping
 
+from repro.core import telemetry
 from repro.core.metrics import ChangeDetector
 from repro.core.points import Config, config_key
 from repro.core.policy import ContextualBandit, CostAwareUCB, Phase, Policy
@@ -178,6 +179,23 @@ class Controller:
             return obj
         raise TypeError(f"expected a {cls.__name__} or factory, got {obj!r}")
 
+    # -- telemetry ---------------------------------------------------------------
+    def _emit(self, name: str, ctl: _CtxCtl, **payload) -> None:
+        """One decision event on the flight recorder (one branch when the
+        bus is disabled)."""
+        _tb = telemetry.bus()
+        if _tb is None:
+            return
+        handler = self.handler.name if self.handler is not None else None
+        _tb.emit(name, track=ctl.view.key, handler=handler,
+                 phase=ctl.phase.value, **payload)
+
+    def _score_snapshot(self, ctl: _CtxCtl, limit: int = 16) -> list:
+        """The election evidence: the most recent (phase, config, metric)
+        observations that fed the policy's decision."""
+        return [[ph.value, repr(cfg), round(m, 6)]
+                for ph, cfg, m in ctl.history[-limit:]]
+
     # -- context admission -------------------------------------------------------
     def _initial_config_for(self, key: Any) -> dict | None:
         if key in self.initial_configs:
@@ -196,6 +214,7 @@ class Controller:
         view = self.handler.context(key)
         ctl = _CtxCtl(view, self._policy_factory(), self._change_factory())
         ctl.sec_per_call = self.sec_per_call_prior
+        self._emit("controller.admit", ctl)
         if self.quarantine is not None:
             name = self.handler.name
             ctl.policy.set_exclude(
@@ -302,6 +321,7 @@ class Controller:
         """Start measuring ``cfg``: activate it on live traffic and dwell.
         (The safety layer overrides this to evaluate in shadow instead.)"""
         ctl.pending = dict(cfg)
+        self._emit("controller.propose", ctl, config=repr(cfg))
         ctl.view.specialize(cfg, wait=self.wait_compiles)
         if self.prefetch:
             # Overlap this candidate's dwell window with the builds of the
@@ -320,6 +340,10 @@ class Controller:
         ctl.view.prefetch(())
         ctl.phase = Phase.EXPLOIT
         ctl.pending = dict(best) if best is not None else None
+        self._emit("controller.settle", ctl, config=repr(best),
+                   metric=(None if metric == -math.inf
+                           else round(metric, 6)),
+                   scores=self._score_snapshot(ctl))
         logger.info("controller[%r]: exploiting %s (metric=%.3f)",
                     ctl.view.key, best, metric)
 
@@ -357,6 +381,8 @@ class Controller:
         if ctl.phase is Phase.EXPLORE:
             ctl.policy.observe(ctl.pending, rate)
             ctl.history.append((Phase.EXPLORE, dict(ctl.pending), rate))
+            self._emit("controller.observe", ctl,
+                       config=repr(ctl.pending), metric=round(rate, 6))
             self._next(ctl)
             return
         # EXPLOIT: watch for workload change.
@@ -383,6 +409,8 @@ class Controller:
         (The safety layer overrides this to roll back first on regression.)"""
         logger.info("controller[%r]: change detected (metric=%.3f) — "
                     "re-exploring", ctl.view.key, rate)
+        self._emit("controller.reexplore", ctl, metric=round(rate, 6),
+                   prev=(round(prev, 6) if prev is not None else None))
         ctl.explorations += 1
         ctl.policy.decay(self.reexplore_decay)
         self._next(ctl)

@@ -15,12 +15,15 @@ Two collection modes, mirroring the paper's measured trade-off (§6.4):
 from __future__ import annotations
 
 import collections
+import logging
 import random
 import threading
 from typing import Any, Callable, Mapping
 
 import jax.numpy as jnp
 import numpy as np
+
+logger = logging.getLogger("repro.core.instrumentation")
 
 __all__ = ["HostRecorder", "TapAccumulator", "RecorderSet",
            "hist_tap", "topk_from_counter"]
@@ -38,6 +41,9 @@ class HostRecorder:
         self.counter: collections.Counter = collections.Counter()
         self.samples = 0
         self.maxlen = maxlen
+        #: samples whose (new) key was discarded because the counter is
+        #: full — the top-N ranking may be missing tail values
+        self.evicted = 0
         self._rng = rng or random.Random(0xC0FFEE)
 
     def maybe_record(self, args: tuple, kwargs: dict) -> None:
@@ -47,11 +53,27 @@ class HostRecorder:
         self.samples += 1
         if len(self.counter) < self.maxlen or value in self.counter:
             self.counter[value] += 1
+            return
+        # Counter full and the value is a never-seen key: it is dropped
+        # (bounding memory), which silently biases the ranking toward
+        # early keys — say so, once, and count every drop.
+        if self.evicted == 0:
+            logger.warning(
+                "host recorder %r saturated at %d distinct values; new "
+                "values are no longer counted", self.label, self.maxlen)
+            from repro.core import telemetry
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("instrument.saturated", label=self.label,
+                         maxlen=self.maxlen, samples=self.samples)
+        self.evicted += 1
 
     def summary(self) -> dict:
         return {
             "kind": "host",
             "samples": self.samples,
+            "saturated": self.evicted > 0,
+            "evicted": self.evicted,
             "top": self.counter.most_common(32),
         }
 
@@ -108,6 +130,7 @@ class RecorderSet:
             for rec in self.host.values():
                 rec.counter.clear()
                 rec.samples = 0
+                rec.evicted = 0
             self.taps.clear()
 
 

@@ -47,6 +47,7 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 import jax
 
 from repro.core import instrumentation as instr_mod
+from repro.core import telemetry
 from repro.core.compile_service import (CompileService, PRIORITY_ACTIVATE,
                                         PRIORITY_SPECULATIVE)
 from repro.core.metrics import AtomicCounter, ThroughputCounter, ThroughputWindow
@@ -643,6 +644,11 @@ class Handler:
                 return
             ctx.active_key = key
             self._rebuild_snapshot_locked(ctx)
+            cfg = dict(ctx.variants[key].config)
+        _tb = telemetry.bus()
+        if _tb is not None:
+            _tb.emit("dispatch.activate", track=ctx.key, handler=self.name,
+                     config=repr(cfg), generic=key == ctx.generic_key)
 
     def _next_epoch(self, ctx: _Context) -> int:
         with self._lock:
@@ -919,6 +925,10 @@ class Handler:
             ctx.canary_period = 0
         self.runtime.compile_service.cancel_pending(
             self.name, key_filter=lambda k: k[0] == ctx.key)
+        _tb = telemetry.bus()
+        if _tb is not None:
+            _tb.emit("dispatch.revert", track=ctx.key, handler=self.name,
+                     config=repr(dict(config)))
         self._install(ctx, config, wait=wait, activate=True)
 
     def enable_instrumentation(self, rate: float = 1.0,
@@ -1128,12 +1138,20 @@ class Handler:
             variant = snap.canary
             guard_fn = snap.canary_guard
             ctx.canary_calls.bump()
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("dispatch.canary_call", track=ctx.key,
+                         handler=self.name, config=repr(dict(variant.config)))
         # Host-side specialization guards (paper §4.4.3): on miss, fall back
         # to the generic variant for this invocation.
         if guard_fn is not None and not guard_fn(args, kwargs):
             variant._guard_misses.bump()
             ctx.guard_misses.bump()
             self._guard_miss_counter.bump()
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("dispatch.guard_miss", track=ctx.key,
+                         handler=self.name, config=repr(dict(variant.config)))
             variant = snap.generic
         # Host-side instrumentation sampling.
         if snap.sample:

@@ -255,6 +255,9 @@ class SafetyController(Controller):
         ctl.view.prefetch(())
         ctl.view.set_canary(best, self.gate.fraction,
                             wait=self.wait_compiles)
+        self._emit("safety.canary_admit", ctl, config=repr(best),
+                   incumbent=repr(active), fraction=self.gate.fraction,
+                   baseline=st.baseline.value)
         logger.info("safety[%r]: canarying %s at %.0f%% of traffic",
                     ctl.view.key, best, 100.0 * self.gate.fraction)
 
@@ -302,6 +305,10 @@ class SafetyController(Controller):
             ctl.policy.observe(cfg, verdict["metric"])
             ctl.history.append((Phase.EXPLORE, dict(cfg),
                                 verdict["metric"]))
+            self._emit("safety.shadow_verdict", ctl, config=repr(cfg),
+                       metric=verdict.get("metric"),
+                       in_slo=bool(verdict.get("in_slo")),
+                       pairs=verdict.get("pairs"))
             if not verdict["in_slo"]:
                 st.shadow_rejected.add(config_key(cfg))
                 self.shadow_rejections += 1
@@ -344,6 +351,9 @@ class SafetyController(Controller):
             # Arm the detector at the incumbent's level: a regression right
             # after promotion must not hide inside the warmup window.
             ctl.change.seed(st.baseline.value)
+        self._emit("safety.promote", ctl, config=repr(promoted),
+                   last_known_good=repr(st.last_known_good),
+                   baseline=st.baseline.value)
         logger.info("safety[%r]: promoted %s after %d in-SLO canary dwells",
                     ctl.view.key, promoted, self.gate.promote_after)
 
@@ -351,9 +361,14 @@ class SafetyController(Controller):
                        quarantine: bool = True) -> None:
         cfg = dict(ctl.pending) if ctl.pending is not None else None
         ctl.view.clear_canary()
+        self._emit("safety.canary_reject", ctl, config=repr(cfg),
+                   quarantined=bool(cfg is not None and quarantine),
+                   baseline=st.baseline.value)
         if cfg is not None and quarantine:
             self.quarantine.add(self.handler.name, ctl.view.key, cfg)
             self.canary_rejections += 1
+            self._emit("safety.quarantine", ctl, config=repr(cfg),
+                       reason="canary_reject")
             logger.warning("safety[%r]: canary %s failed probation; "
                            "quarantined", ctl.view.key, cfg)
         st.stage = "live"
@@ -388,6 +403,11 @@ class SafetyController(Controller):
                 # Re-arm the detector at the pre-regression level so the
                 # recovery back to it does not read as another change.
                 ctl.change.seed(prev)
+                self._emit("safety.rollback", ctl, config=repr(active),
+                           restored=repr(lkg), metric=round(rate, 6),
+                           prev=round(prev, 6))
+                self._emit("safety.quarantine", ctl, config=repr(active),
+                           reason="rollback")
                 logger.warning(
                     "safety[%r]: regression after promotion (%.3f -> %.3f); "
                     "reverted to last-known-good %s and quarantined %s",

@@ -60,6 +60,7 @@ import random
 import time
 from types import SimpleNamespace
 
+from repro.core import telemetry
 from repro.serve import Request, pseudo_poisson_times
 
 KV_PAGE_SIZES = (8, 16, 64)
@@ -288,12 +289,53 @@ def build_engine(args) -> SimpleNamespace:
         initial_plan=initial_plan, shadow=shadow)
 
 
+def _status_provider(built, rt, args):
+    """Assemble the live snapshot ``launch/status.py`` renders: per-context
+    lifecycle, safety stage, goodput window, compile queue, bus health."""
+    def provider() -> dict:
+        controller, engine = built.controller, built.engine
+        contexts = {}
+        for key, st in controller.status().items():
+            contexts[repr(key)] = {
+                "phase": st["phase"],
+                "active": st["active"],
+                "pending": st["pending"],
+                "best_metric": st["best_metric"],
+                "calls": st["calls"],
+                "explorations": st["explorations"],
+                "tput_window": st["tput_window"],
+            }
+        doc = {
+            "mode": "single",
+            "replica": args.replica_id,
+            "handler": built.handler.name,
+            "slo_ms": args.slo_ms,
+            "contexts": contexts,
+            "serve": built.metrics.summary(),
+            "queue": {"waiting": len(engine.queue),
+                      "in_flight": len(engine.active)},
+            "compile": rt.compile_stats(),
+        }
+        status_fn = getattr(controller, "safety_status", None)
+        if callable(status_fn):
+            doc["safety"] = status_fn()
+        _tb = telemetry.bus()
+        if _tb is not None:
+            doc["bus"] = _tb.stats()
+        return doc
+    return provider
+
+
 def _run_single(args) -> None:
     from repro.serve import OpenLoopSource
     from repro.serve.fleet import SpecPlane
 
     built = build_engine(args)
     rt, engine = built.rt, built.engine
+    snap = (telemetry.SnapshotWriter(args.telemetry_snapshot,
+                                     _status_provider(built, rt, args),
+                                     interval_s=args.snapshot_interval_s)
+            if args.telemetry_snapshot else None)
     if built.restored:
         print(f"restored spec state: bucket scheme={built.initial_scheme}, "
               f"kv plan={built.initial_plan}, "
@@ -344,9 +386,23 @@ def _run_single(args) -> None:
     if plane is not None:
         n = plane.publish_controller("serve_step", built.controller)
         print(f"plane: published {n} settled winners")
+    if snap is not None:
+        snap.close()                      # one final snapshot at rest
+    _export_trace(args)
     # shutdown drains (already drained), persists spec state once settled,
     # and stops the compile workers.
     engine.shutdown(state_dir=args.cache_dir)
+
+
+def _export_trace(args) -> None:
+    if not args.trace_out:
+        return
+    _tb = telemetry.bus()
+    if _tb is None:
+        return
+    doc = telemetry.export_chrome_trace(_tb.events(), args.trace_out)
+    print(f"trace: wrote {len(doc['traceEvents'])} events to "
+          f"{args.trace_out} ({json.dumps(_tb.stats())})")
 
 
 def _run_fleet(args) -> None:
@@ -365,6 +421,10 @@ def _run_fleet(args) -> None:
         passthrough.append("--portable-cache")
     if args.no_safety:
         passthrough.append("--no-safety")
+    if args.trace_out or args.telemetry_snapshot:
+        # Workers run their own flight recorder and forward the stream;
+        # SubprocessReplica absorbs it onto this front's bus per replica.
+        passthrough.append("--telemetry")
     env = worker_env()
     replicas = []
     for i in range(args.replicas):
@@ -390,6 +450,18 @@ def _run_fleet(args) -> None:
                                        seed=substream_seed(args.seed, i))
     router = ReplicaRouter(replicas, policy=args.router)
     source = OpenLoopSource(router, schedule)
+
+    def fleet_provider() -> dict:
+        doc = {"mode": "fleet", "router": router.stats(),
+               "replicas": {r.name: {"depth": r.depth()} for r in replicas}}
+        _tb = telemetry.bus()
+        if _tb is not None:
+            doc["bus"] = _tb.stats()
+        return doc
+
+    snap = (telemetry.SnapshotWriter(args.telemetry_snapshot, fleet_provider,
+                                     interval_s=args.snapshot_interval_s)
+            if args.telemetry_snapshot else None)
     while not source.exhausted:
         source.pump(time.perf_counter())
         delay = source.next_due(time.perf_counter())
@@ -415,6 +487,9 @@ def _run_fleet(args) -> None:
         print(f"replica {s['replica']}: steps={s['steps']} "
               f"time_to_settled_s={s['time_to_settled_s']} "
               f"compile={json.dumps(s['compile'])}")
+    if snap is not None:
+        snap.close()
+    _export_trace(args)
 
 
 def main() -> None:
@@ -433,7 +508,17 @@ def main() -> None:
                     help="plane subscribe/publish interval")
     ap.add_argument("--replica-id", default="0",
                     help="this replica's plane identity (single mode)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the flight-recorder stream as Chrome-trace "
+                         "JSON here on exit (enables the event bus)")
+    ap.add_argument("--telemetry-snapshot", default=None,
+                    help="periodically write an atomic live-status JSON "
+                         "snapshot here (read it with repro.launch.status)")
+    ap.add_argument("--snapshot-interval-s", type=float, default=1.0,
+                    help="telemetry snapshot period")
     args = ap.parse_args()
+    if args.trace_out or args.telemetry_snapshot:
+        telemetry.enable()
     if args.replicas > 1:
         _run_fleet(args)
     else:

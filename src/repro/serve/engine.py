@@ -37,6 +37,7 @@ import os
 import time
 from typing import Any, Callable, Protocol
 
+from repro.core import telemetry
 from repro.serve.batcher import BucketTuner, ContinuousBatcher, PackedBatch
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import AdmissionQueue, OpenLoopSource
@@ -128,6 +129,7 @@ class ServeEngine:
         self.bucket_steps: dict[int, int] = {}
         self.phase_steps: dict[str, int] = {}
         self._draining = False
+        self._last_depth = -1        # last queue depth put on the event bus
 
     # -- client side -----------------------------------------------------------
     def submit(self, request: Request) -> bool:
@@ -158,6 +160,22 @@ class ServeEngine:
                 if self.controller is not None:
                     self.controller.step()
             return 0
+        _tb = telemetry.bus()
+        if _tb is not None:
+            prev = {id(r) for r in self.active}
+            for req in batch.all_rows:
+                if id(req) not in prev:
+                    _tb.emit("serve.schedule", track=f"bucket:{batch.size}",
+                             rid=req.rid, bucket=batch.size,
+                             phase=batch.phase,
+                             queue_delay_s=(round(now - req.arrival_t, 6)
+                                            if req.arrival_t is not None
+                                            else None))
+            depth = len(self.queue)
+            if depth != self._last_depth:
+                self._last_depth = depth
+                _tb.emit("serve.queue_depth", "counter", depth=depth,
+                         in_flight=len(batch.all_rows))
         self.active = list(batch.all_rows)
         produced = self.executor.execute(batch)
         t_after = self.clock()
@@ -197,6 +215,19 @@ class ServeEngine:
             retire(req)
         completion = Completion.from_request(req, default_slo_s=self.slo_s)
         self.metrics.observe(completion)
+        _tb = telemetry.bus()
+        if _tb is not None:
+            # Request span on the serve track: ts is back-dated by the
+            # measured latency so the span covers arrival -> finish.
+            dur = completion.latency_s * 1e6
+            qd = completion.queue_delay_s
+            _tb.emit("serve.request", "span", track="serve",
+                     ts=telemetry.now_us() - dur, dur=dur, rid=req.rid,
+                     tokens=completion.tokens,
+                     prompt_tokens=completion.prompt_tokens,
+                     slo_met=completion.within_slo,
+                     queue_delay_s=(round(qd, 6) if qd is not None
+                                    else None))
         if self.on_completion is not None:
             self.on_completion(completion)
 
@@ -256,6 +287,11 @@ class ServeEngine:
                     # metrics count only the in-flight sheds; the flushed
                     # waiters are already in queue.stats()["shed"].
                     self.metrics.observe_shed(len(self.active))
+                    _tb = telemetry.bus()
+                    if _tb is not None:
+                        _tb.emit("serve.shed", track="serve",
+                                 in_flight=len(self.active),
+                                 flushed=len(flushed))
                     logger.warning("drain timed out; shed %d requests",
                                    len(flushed) + len(self.active))
                     self.active.clear()

@@ -30,6 +30,7 @@ import time
 from typing import Any, Callable, Mapping
 
 from repro.checkpoint.store import load_plane_record, save_plane_record
+from repro.core import telemetry
 from repro.core.runtime import decode_context_key, encode_context_key
 
 logger = logging.getLogger("repro.serve.fleet.plane")
@@ -114,6 +115,12 @@ class SpecPlane:
                           replica=self.replica,
                           t=self.clock() if t is None else t,
                           quarantined=quarantined)
+        _tb = telemetry.bus()
+        if _tb is not None:
+            _tb.emit("plane.publish", track=enc, handler=handler,
+                     config=repr(dict(config)), goodput=goodput,
+                     epoch=epoch, replica_id=self.replica,
+                     quarantined=len(quarantined or []))
         return path
 
     def publish_controller(self, handler_name: str, controller,
@@ -229,6 +236,12 @@ class SpecPlane:
                     type(e).__name__, e)
                 continue
             self._applied[(handler_name, enc)] = self._rank(record)
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("plane.resolve", track=enc, handler=handler_name,
+                         config=repr(dict(record["config"])),
+                         source=record["replica"], epoch=record["epoch"],
+                         goodput=record["goodput"])
             logger.info("plane: seeded %s/%s from replica %s (epoch %d, "
                         "goodput %.3f)", handler_name, enc,
                         record["replica"], record["epoch"],
@@ -294,4 +307,8 @@ class SpecPlane:
                 self._published_quar.pop(pair, None)
         if removed:
             logger.info("plane gc: removed %d stale record(s)", removed)
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("plane.gc", removed=removed,
+                         remaining=len(records) - removed)
         return removed

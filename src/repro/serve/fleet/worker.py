@@ -13,10 +13,13 @@ Protocol (newline-delimited JSON):
   work, publishes its settled winners to the spec plane, and exits.
 * stdout (worker -> front): ``{"type": "ready"}`` once the engine is
   built; ``{"type": "depth", "waiting": ..., "in_flight": ...}``
-  periodically (the join-shortest-queue router's signal); one final
-  ``{"type": "stats", ...}`` with the metrics snapshot
-  (:meth:`~repro.serve.metrics.ServeMetrics.state` — mergeable by the
-  front), compile stats, and time-to-settled.
+  periodically (the join-shortest-queue router's signal); with
+  ``--telemetry``, ``{"type": "events", "replica": ..., "events":
+  [...]}`` batches of flight-recorder events (the front absorbs them
+  onto its own bus tagged with the replica id, so consumers see one
+  merged stream); one final ``{"type": "stats", ...}`` with the metrics
+  snapshot (:meth:`~repro.serve.metrics.ServeMetrics.state` — mergeable
+  by the front), compile stats, and time-to-settled.
 
 Two profiles: ``synthetic`` (the benchmark's fused-vs-split matmul
 handler — cheap, CPU-friendly, deterministic winner) and ``lm`` (the
@@ -39,6 +42,7 @@ feeds its stdin, and tracks the depth reports — satisfying the
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import logging
 import os
@@ -117,6 +121,14 @@ class SubprocessReplica:
             elif kind == "depth":
                 self._depth = int(msg.get("waiting", 0)) + \
                     int(msg.get("in_flight", 0))
+            elif kind == "events":
+                # Forwarded flight-recorder batch: merge onto the front's
+                # bus (if enabled) tagged with the replica id.
+                from repro.core import telemetry
+                _tb = telemetry.bus()
+                if _tb is not None:
+                    _tb.absorb(msg.get("events", ()),
+                               replica=str(msg.get("replica", self.name)))
             elif kind == "stats":
                 self.stats = msg
         self._ready.set()                 # EOF: never leave waiters hanging
@@ -250,6 +262,9 @@ def main(argv=None) -> None:
                          " epochs, retired contexts); 0 disables")
     ap.add_argument("--max-wall-s", type=float, default=300.0,
                     help="hard serve-loop wall cap (CI hang guard)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the flight-recorder bus and forward its "
+                         "events to the front over stdout")
     if ns.profile == "lm":
         # the launch driver's flag set (--arch, --batch, --dwell,
         # --cache-dir, --slo-ms, ... — shared via add_engine_args)
@@ -265,6 +280,28 @@ def main(argv=None) -> None:
 
     from repro.serve import Request
     from repro.serve.fleet.plane import SpecPlane
+
+    # Flight recorder: a bounded sink buffer the serve loop flushes to the
+    # front as line-JSON ``events`` batches.  Drop-not-block end to end —
+    # the deque overwrites its oldest entries if the loop falls behind.
+    fwd: collections.deque | None = None
+    if args.telemetry:
+        from repro.core import telemetry
+        telemetry.enable().add_sink(
+            (fwd := collections.deque(maxlen=4096)).append)
+
+    def flush_events() -> None:
+        if not fwd:
+            return
+        batch = []
+        while fwd:
+            try:
+                batch.append(fwd.popleft())
+            except IndexError:            # racy emit during flush
+                break
+        if batch:
+            _emit({"type": "events", "replica": args.replica_id,
+                   "events": batch})
 
     rt, engine, publishable = (_synthetic_stack(args)
                                if args.profile == "synthetic"
@@ -332,6 +369,7 @@ def main(argv=None) -> None:
         if now - last_depth >= _DEPTH_INTERVAL_S:
             _emit({"type": "depth", "waiting": len(engine.queue),
                    "in_flight": len(engine.active)})
+            flush_events()
             last_depth = now
         if plane is not None and now - last_plane >= args.plane_poll_s:
             plane.poll(rt)
@@ -354,6 +392,7 @@ def main(argv=None) -> None:
         for name, ctl in publishable:
             plane.publish_controller(name, ctl)
 
+    flush_events()                        # final batch before stats
     stats = engine.stats()
     settled = {name: {str(k): {kk: repr(vv) for kk, vv in cfg.items()}
                       for k, (cfg, _) in ctl.settled_winners().items()}

@@ -12,13 +12,18 @@ can use directly):
 * **goodput** — completed tokens *within SLO* per second (the paper-adjacent
   metric: a token that arrives after its deadline is not service),
 * **throughput** — all completed tokens per second, SLO or not.
+
+Sample buffers are **reservoirs** (Vitter's algorithm R): a fixed-capacity
+uniform sample over every completion ever observed, so a long-lived server
+— or a fleet merge over many replicas — never grows the buffers past
+``window`` while percentiles stay nearest-rank over an unbiased sample.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
-from collections import deque
-from typing import Callable, Deque, Mapping
+from typing import Callable, Mapping
 
 from repro.core.metrics import ThroughputCounter, nearest_rank
 from repro.serve.request import Completion
@@ -30,17 +35,66 @@ _COUNTERS = ("completed", "completed_tokens", "goodput_tokens",
              "slo_met", "slo_missed", "shed")
 
 
+class _Reservoir:
+    """Fixed-capacity uniform sample over everything ever offered.
+
+    Below capacity it retains everything (percentiles are then exact);
+    past capacity each new value replaces a random retained one with
+    probability ``capacity / seen`` (algorithm R), keeping the retained
+    set a uniform sample of the full stream.  The RNG is seeded, so a
+    replayed stream reproduces the same sample.
+    """
+
+    __slots__ = ("capacity", "samples", "seen", "_rng")
+
+    def __init__(self, capacity: int, seed: int = 0x5EED):
+        self.capacity = max(1, int(capacity))
+        self.samples: list[float] = []
+        self.seen = 0
+        self._rng = random.Random(seed)
+
+    def add(self, x: float) -> None:
+        self.seen += 1
+        if len(self.samples) < self.capacity:
+            self.samples.append(x)
+            return
+        j = self._rng.randrange(self.seen)
+        if j < self.capacity:
+            self.samples[j] = x
+
+    def extend(self, xs) -> None:
+        for x in xs:
+            self.add(x)
+
+    def load(self, samples, seen=None) -> None:
+        """Restore a retained sample (state round-trip / merge), keeping a
+        uniform subsample when it exceeds capacity."""
+        xs = list(samples)
+        if len(xs) > self.capacity:
+            xs = self._rng.sample(xs, self.capacity)
+        self.samples = xs
+        self.seen = max(len(xs),
+                        int(seen) if seen is not None else len(xs))
+
+    def list(self) -> list[float]:
+        return list(self.samples)
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+
 class ServeMetrics:
     """Completion accounting: percentiles, counters, goodput windows."""
 
     def __init__(self, slo_s: float | None = None, window: int = 2048,
                  clock: Callable[[], float] = time.perf_counter):
         self.slo_s = slo_s
+        self.window = int(window)
         self._clock = clock
         self._lock = threading.Lock()
-        self._latencies: Deque[float] = deque(maxlen=window)
-        self._queue_delays: Deque[float] = deque(maxlen=window)
-        self._ttfts: Deque[float] = deque(maxlen=window)
+        self._latencies = _Reservoir(window, seed=0x5EED)
+        self._queue_delays = _Reservoir(window, seed=0x5EED + 1)
+        self._ttfts = _Reservoir(window, seed=0x5EED + 2)
         self.completed = 0
         self.completed_tokens = 0
         self.goodput_tokens = 0      # lifetime tokens of in-SLO completions
@@ -54,16 +108,16 @@ class ServeMetrics:
     # -- feeding ---------------------------------------------------------------
     def observe(self, completion: Completion) -> None:
         with self._lock:
-            self._latencies.append(completion.latency_s)
+            self._latencies.add(completion.latency_s)
             qd = completion.queue_delay_s
             if qd is not None:
-                self._queue_delays.append(qd)
+                self._queue_delays.add(qd)
             if completion.first_token_t is not None:
                 # arrival -> first token: under phased execution this spans
                 # queueing plus the whole (chunked) prefill, the latency
                 # prefill/decode disaggregation trades against goodput.
-                self._ttfts.append(completion.first_token_t
-                                   - completion.arrival_t)
+                self._ttfts.add(completion.first_token_t
+                                - completion.arrival_t)
             self.completed += 1
             self.completed_tokens += completion.tokens
             if completion.within_slo:
@@ -85,7 +139,7 @@ class ServeMetrics:
         empty) — the shared nearest-rank convention
         (:func:`repro.core.metrics.nearest_rank`)."""
         with self._lock:
-            xs = list(self._latencies)
+            xs = self._latencies.list()
         return nearest_rank(xs, p)
 
     def interval_goodput(self) -> float:
@@ -98,7 +152,7 @@ class ServeMetrics:
     def ttft_percentile(self, p: float) -> float:
         """Time-to-first-token percentile in seconds (NaN when empty)."""
         with self._lock:
-            xs = list(self._ttfts)
+            xs = self._ttfts.list()
         return nearest_rank(xs, p)
 
     # -- fleet aggregation -----------------------------------------------------
@@ -109,9 +163,12 @@ class ServeMetrics:
         with self._lock:
             return {
                 "slo_s": self.slo_s,
-                "latencies": list(self._latencies),
-                "queue_delays": list(self._queue_delays),
-                "ttfts": list(self._ttfts),
+                "latencies": self._latencies.list(),
+                "latencies_seen": self._latencies.seen,
+                "queue_delays": self._queue_delays.list(),
+                "queue_delays_seen": self._queue_delays.seen,
+                "ttfts": self._ttfts.list(),
+                "ttfts_seen": self._ttfts.seen,
                 **{f: getattr(self, f) for f in _COUNTERS},
             }
 
@@ -120,14 +177,18 @@ class ServeMetrics:
                    clock: Callable[[], float] = time.perf_counter
                    ) -> "ServeMetrics":
         """Rebuild a :class:`ServeMetrics` from a :meth:`state` snapshot
-        (rate counters restart — only samples and counters travel)."""
-        lat = list(state.get("latencies", ()))
+        (rate counters restart — only samples and counters travel).  The
+        rebuilt buffers stay bounded at ``window`` even when the snapshot
+        carries more samples (a fleet merge): a uniform subsample is kept.
+        Snapshots without ``*_seen`` fields (older wire format) are
+        accepted — ``seen`` then defaults to the sample count."""
         if window is None:
-            window = max(2048, len(lat))
+            window = 2048
         m = cls(slo_s=state.get("slo_s"), window=window, clock=clock)
-        m._latencies.extend(lat)
-        m._queue_delays.extend(state.get("queue_delays", ()))
-        m._ttfts.extend(state.get("ttfts", ()))
+        for field, res in (("latencies", m._latencies),
+                           ("queue_delays", m._queue_delays),
+                           ("ttfts", m._ttfts)):
+            res.load(state.get(field, ()), seen=state.get(f"{field}_seen"))
         for f in _COUNTERS:
             setattr(m, f, int(state.get(f, 0)))
         return m
@@ -151,6 +212,9 @@ class ServeMetrics:
         for s in states:
             for samples in ("latencies", "queue_delays", "ttfts"):
                 merged[samples].extend(s.get(samples, ()))
+                merged[f"{samples}_seen"] = (
+                    merged.get(f"{samples}_seen", 0)
+                    + int(s.get(f"{samples}_seen", len(s.get(samples, ())))))
             for f in _COUNTERS:
                 merged[f] += int(s.get(f, 0))
         return cls.from_state(merged)
@@ -172,6 +236,7 @@ class ServeMetrics:
             "shed": shed,
             "slo_s": self.slo_s,
             "latency_window": n,
+            "latency_seen": self._latencies.seen,
             "latency_p50_ms": round(self.percentile(50) * 1e3, 3)
             if n else None,
             "latency_p95_ms": round(self.percentile(95) * 1e3, 3)

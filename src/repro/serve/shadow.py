@@ -27,6 +27,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
+
 logger = logging.getLogger("repro.serve.shadow")
 
 __all__ = ["ShadowEvaluator"]
@@ -119,6 +121,10 @@ class ShadowEvaluator:
         st.cand_times = []
         st.inc_times = []
         st.attempts = 0
+        _tb = telemetry.bus()
+        if _tb is not None:
+            _tb.emit("shadow.begin", track=key, candidate=repr(st.candidate),
+                     incumbent=repr(st.incumbent), samples=len(st.samples))
 
     def clear(self, key: Any) -> None:
         st = self._ctx.get(key)
@@ -191,8 +197,18 @@ class ShadowEvaluator:
             self.dropped_samples += 1
             logger.debug("shadow pair failed for %r: %s: %s", key,
                          type(e).__name__, e)
+            _tb = telemetry.bus()
+            if _tb is not None:
+                _tb.emit("shadow.sample_drop", track=key,
+                         error=type(e).__name__)
             return True                   # consumed budget regardless
         self.calls += 2
+        _tb = telemetry.bus()
+        if _tb is not None:
+            _tb.emit("shadow.pair", track=key,
+                     candidate_s=round(st.cand_times[-1], 6),
+                     incumbent_s=round(st.inc_times[-1], 6),
+                     pairs=min(len(st.cand_times), len(st.inc_times)))
         return True
 
     # -- verdict ------------------------------------------------------------------

@@ -342,6 +342,47 @@ def test_metrics_merge_empty_and_single():
     assert ServeMetrics.merge(m).completed == 1
 
 
+def test_metrics_buffers_bounded_on_long_streams():
+    """Regression (ISSUE 9 satellite): sample buffers are reservoirs — a
+    long-lived server never grows them past ``window``, and percentiles
+    stay nearest-rank over a uniform sample of the whole stream."""
+    m = ServeMetrics(slo_s=10.0, window=64)
+    for i in range(10_000):
+        m.observe(_completion(0.001 * (i % 100 + 1)))
+    assert len(m._latencies) == 64
+    assert m._latencies.seen == 10_000
+    assert m.completed == 10_000          # counters are exact, not sampled
+    # the retained sample spans the stream's range, not just its head
+    assert 0.0 < m.percentile(50) <= 0.1
+    st = m.state()
+    assert len(st["latencies"]) == 64 and st["latencies_seen"] == 10_000
+
+
+def test_metrics_merge_stays_bounded():
+    parts = []
+    for r in range(8):
+        m = ServeMetrics(slo_s=1.0, window=2048)
+        for i in range(1000):
+            m.observe(_completion(0.01))
+        parts.append(m)
+    merged = ServeMetrics.merge(*parts)
+    assert merged.completed == 8000
+    assert len(merged._latencies) <= merged.window
+    assert merged._latencies.seen == 8000
+    # merging merges never compounds the window either
+    again = ServeMetrics.merge(merged, merged)
+    assert len(again._latencies) <= again.window
+    assert again._latencies.seen == 16_000
+
+
+def test_metrics_from_state_accepts_pre_reservoir_wire_format():
+    # older snapshots carry no *_seen fields: seen defaults to len(samples)
+    wire = {"slo_s": 0.5, "latencies": [0.1, 0.2], "completed": 2}
+    back = ServeMetrics.from_state(wire)
+    assert back._latencies.seen == 2
+    assert back.percentile(50) == pytest.approx(0.1)
+
+
 # -- subprocess worker ---------------------------------------------------------
 
 def test_subprocess_worker_round_trip(tmp_path):
