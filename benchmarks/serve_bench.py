@@ -48,6 +48,21 @@ tracked by:
                              scaling vs the single replica, recompiles
                              on the warm replicas (must be zero), and
                              the cold-vs-warm time-to-settled speedup,
+* ``tenants``              — multi-tenant multi-model serving: a
+                             tight-SLO qwen3 tenant and a loose-SLO
+                             rwkv6 tenant share one engine, one
+                             CompileService and one variant cache,
+                             each dispatching through its own
+                             ``(tenant, phase, bucket)`` contexts.  The
+                             tight tenant's burst is served three ways —
+                             alone, against a loose-tenant flood under
+                             weighted-fair DRR, and against the same
+                             flood under plain FCFS — recording that the
+                             two tenants settle on structurally distinct
+                             per-context configs and that DRR preserves
+                             the tight tenant's in-SLO tokens (>= 0.8x
+                             its solo run) while FCFS loses them to the
+                             flood,
 * ``safety``               — safe online exploration: the same open-loop
                              schedule served three times with a
                              deliberately-broken candidate and an
@@ -1069,6 +1084,313 @@ def run_fleet(replicas: int = 2, n_requests: int = 48, rate: float = 40.0,
     }
 
 
+def _calibrate_tenant_step(arch: str, batch: int, max_len: int,
+                           chunk: int, reps: int = 5) -> dict:
+    """Median seconds per (phase,) serve step of one reduced model at the
+    serving bucket, through the real phase-disaggregated handler on its
+    default config — the per-step costs the tenant scenario's deadline
+    prediction is built from."""
+    from repro.training import make_serve_builder, phase_context_fn
+
+    cfg = configs.get_reduced(arch).replace(compute_dtype="float32")
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register(f"tenant_calib[{arch}]",
+                          make_serve_builder(cfg, kernel_impl="xla"),
+                          context_fn=phase_context_fn, donate_argnums=1)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    run_opts = RunOptions(decode_cache_dtype="float32")
+    out = {}
+    for phase in ("prefill", "decode"):
+        if phase == "prefill":
+            tokens = jnp.zeros((batch, chunk), jnp.int32)
+            n_new = jnp.full((batch,), chunk, jnp.int32)
+        else:
+            tokens = jnp.zeros((batch,), jnp.int32)
+            n_new = jnp.ones((batch,), jnp.int32)
+        pos = jnp.zeros((batch,), jnp.int32)
+        cache = model.init_cache(cfg, batch, max_len, run_opts)
+        logits, cache = handler(params, cache, tokens, pos, n_new)
+        jax.block_until_ready(logits)          # warm the variant
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            logits, cache = handler(params, cache, tokens, pos, n_new)
+            jax.block_until_ready(logits)
+            ts.append(time.perf_counter() - t0)
+        out[phase] = sorted(ts)[len(ts) // 2]
+    rt.shutdown()
+    return out
+
+
+def run_tenants(tight_arch: str = "qwen3-0.6b",
+                loose_arch: str = "rwkv6-1.6b", batch: int = 4,
+                max_len: int = 160, chunk: int = 32, dwell: int = 3,
+                n_tight: int = 20, tight_prompt: int = 128,
+                tight_budget: int = 6, loose_prompt: int = 64,
+                loose_budget: int = 16, loose_mult: float = 8.0,
+                tight_weight: float = 2.0, loose_weight: float = 1.0,
+                max_wall_s: float = 240.0) -> dict:
+    """Multi-tenant serving: per-tenant specialization + DRR isolation.
+
+    Two real reduced models share one engine through the multi-tenant
+    plane (:mod:`repro.serve.tenancy`): a **tight** qwen3 tenant whose
+    burst carries a calibrated deadline, and a **loose** rwkv6 tenant
+    flooding the queue with long-budget work under an effectively
+    infinite deadline.  Each tenant's traffic dispatches through its own
+    ``(tenant, phase, bucket)`` contexts, so the shared runtime runs two
+    independent Controller searches over *different* spec spaces (the
+    attention tenant sweeps ``cache_dtype``/``rmsnorm_impl``; the rwkv
+    tenant sweeps its ``chunk_len``) — the settled configs are
+    structurally distinct, the first acceptance criterion.
+
+    Isolation is a three-run makespan comparison on identical tight
+    bursts (the loose flood arrives *before* the tight burst in both
+    mixed runs):
+
+    * **solo** — the tight tenant alone: the reference in-SLO tokens.
+    * **drr**  — both tenants under :class:`DeficitRoundRobin`: the
+      flood cannot displace the tight tenant's weighted share, so its
+      burst drains within ~``1 + (w_l/w_t)`` of the solo makespan.
+    * **fcfs** — both tenants under plain FCFS: the earlier-arrived
+      flood is served to exhaustion first, pushing the tight burst past
+      ``loose_mult`` solo makespans.
+
+    Every run is **two passes over the same engine**: a warmup pass
+    (huge deadlines) pays all compiles and settles every Controller,
+    then the measured pass replays the schedule against the real
+    deadline with the engine in steady-state exploit — so the measured
+    numbers reflect scheduling, not compile noise.  The shared deadline
+    is the geometric mean of the predicted DRR and FCFS tight-burst
+    makespans (from per-phase step costs measured on this host), met by
+    DRR and missed by FCFS with the same multiplicative margin.
+    Acceptance: ``distinct_tenant_configs`` and ``drr_isolation`` (DRR
+    in-SLO tight tokens >= 0.8x solo while FCFS falls below 0.8x).
+    """
+    from repro.serve import (AdmissionQueue, ContinuousBatcher,
+                             ControllerGroup, DeficitRoundRobin,
+                             MultiTenantExecutor, OpenLoopSource, PagedKV,
+                             PhasedExecutor, Request, ServeEngine,
+                             ServeMetrics, make_scheduler,
+                             make_tenant_context_fn)
+    from repro.training import make_serve_builder, phase_context_fn
+
+    import shutil
+    import tempfile
+
+    # -- calibration: per-phase step costs of each model on this host ------
+    costs = {"tight": _calibrate_tenant_step(tight_arch, batch, max_len,
+                                             chunk),
+             "loose": _calibrate_tenant_step(loose_arch, batch, max_len,
+                                             chunk)}
+    overhead = _calibrate_engine_overhead()
+
+    def s_req(who: str, prompt: int, budget: int) -> float:
+        steps_pre = -(-prompt // chunk)
+        return (steps_pre * (costs[who]["prefill"] + overhead)
+                + budget * (costs[who]["decode"] + overhead))
+
+    s_tight = s_req("tight", tight_prompt, tight_budget)
+    s_loose = s_req("loose", loose_prompt, loose_budget)
+    m_tight = n_tight / batch * s_tight        # solo tight makespan
+    # Flood sized to bury the tight burst `loose_mult` deep under FCFS.
+    n_loose = max(24, min(120, batch * round(
+        loose_mult * m_tight / max(s_loose, 1e-9))))
+    n_loose -= n_loose % batch
+    m_loose = n_loose / batch * s_loose
+    # DRR prediction: the tight burst's own service plus the loose tokens
+    # DRR interleaves during contention (w_l/w_t per tight token) at the
+    # loose model's per-token cost.
+    ptc_loose = s_loose / (loose_prompt + loose_budget)
+    drr_pred = m_tight + (loose_weight / tight_weight) * n_tight * \
+        (tight_prompt + tight_budget) * ptc_loose
+    fcfs_pred = m_loose + m_tight
+    deadline = (drr_pred * fcfs_pred) ** 0.5
+
+    def tight_schedule(deadline_s: float):
+        return [(0.05 + i * 1e-4,
+                 Request(tenant="tight", prompt_tokens=tight_prompt,
+                         max_new_tokens=tight_budget,
+                         deadline_s=deadline_s))
+                for i in range(n_tight)]
+
+    def loose_schedule():
+        return [(i * 1e-4,
+                 Request(tenant="loose", prompt_tokens=loose_prompt,
+                         max_new_tokens=loose_budget, deadline_s=1e6))
+                for i in range(n_loose)]
+
+    cache_root = tempfile.mkdtemp(prefix="tenant_bench_")
+
+    def run_once(kind: str) -> dict:
+        tenants = [("tight", tight_arch)] + (
+            [("loose", loose_arch)] if kind != "solo" else [])
+        # One runtime, one CompileService, one variant cache for every
+        # tenant — shared across the three runs so repeat activations of
+        # the same (model, config) variant are cache hits, as in a fleet.
+        rt = IridescentRuntime(async_compile=False,
+                               variant_cache=os.path.join(cache_root,
+                                                          "variants"))
+        latency = {}                # full context key -> seconds EWMA
+
+        def context_latency_rate(view):
+            v = latency[view.key].value if view.key in latency else None
+            return 1.0 / max(v, 1e-9) if v else 0.0
+
+        pairs, executors = [], {}
+        for name, arch in tenants:
+            cfg = configs.get_reduced(arch).replace(
+                compute_dtype="float32")
+            ctx_fn = make_tenant_context_fn(name, phase_context_fn)
+            handler = rt.register(f"serve_step[{name}]",
+                                  make_serve_builder(cfg,
+                                                     kernel_impl="xla"),
+                                  context_fn=ctx_fn, donate_argnums=1)
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            run_opts = RunOptions(decode_cache_dtype="float32")
+            kv = PagedKV(model.init_cache(cfg, 1, max_len, run_opts),
+                         model.cache_axes(cfg), max_len=max_len,
+                         capacity_tokens=batch * max_len, page_size=16)
+
+            def timed(params, cache, tokens, pos, n_new,
+                      _h=handler, _ctx=ctx_fn):
+                key = _ctx((params, cache, tokens, pos, n_new), {})
+                t0 = time.perf_counter()
+                logits, new_cache = _h(params, cache, tokens, pos, n_new)
+                jax.block_until_ready(logits)
+                latency.setdefault(key, EWMA(0.5)).update(
+                    time.perf_counter() - t0)
+                return logits, new_cache
+
+            executors[name] = PhasedExecutor(timed, params, kv,
+                                             prefill_chunk=chunk,
+                                             vocab_size=cfg.vocab_size)
+            space = handler.spec_space()
+            labels = (["chunk_len"] if cfg.mixer in ("rwkv6", "hymba")
+                      else ["cache_dtype", "rmsnorm_impl"])
+            controller = Controller(
+                handler,
+                (lambda space=space, labels=labels:
+                 ExhaustiveSweep.from_space(space, labels)),
+                metric=context_latency_rate, dwell=dwell,
+                change_detector=lambda: ChangeDetector(float("inf")),
+                wait_compiles=True, prefetch=0)
+            pairs.append((handler, controller))
+
+        group = ControllerGroup(pairs)
+        if kind == "fcfs":
+            scheduler = make_scheduler("fcfs")
+        else:
+            scheduler = DeficitRoundRobin({"tight": tight_weight,
+                                           "loose": loose_weight})
+        metrics = ServeMetrics(slo_s=deadline)
+        engine = ServeEngine(
+            pairs[0][0], group, ContinuousBatcher(batch, scheme="single"),
+            scheduler, executor=MultiTenantExecutor(executors),
+            queue=AdmissionQueue(depth=n_tight + n_loose + batch),
+            metrics=metrics, slo_s=deadline)
+
+        def serve_pass(deadline_s: float) -> float:
+            # No drain between passes: ``run`` serves the schedule to
+            # exhaustion on its own, and ``drain`` would close admission
+            # for the next pass.
+            schedule = ([] if kind == "solo" else loose_schedule()) \
+                + tight_schedule(deadline_s)
+            source = OpenLoopSource(engine.queue, schedule)
+            t0 = time.perf_counter()
+            engine.run(source=source, duration_s=max_wall_s)
+            return time.perf_counter() - t0
+
+        # Warmup pass(es): pay every compile, settle every Controller.
+        warm_wall = serve_pass(1e6)
+        warm_tries = 1
+        while not group.settled() and warm_tries < 3:
+            warm_wall += serve_pass(1e6)
+            warm_tries += 1
+
+        def tenant_counts():
+            return {t: (ch.goodput_tokens, ch.completed, ch.slo_missed)
+                    for t, ch in metrics.tenants().items()}
+
+        before = tenant_counts()
+        wall = serve_pass(deadline)            # the measured pass
+        after = tenant_counts()
+        per_tenant = {
+            t: {"goodput_tokens": after[t][0] - before.get(t, (0,) * 3)[0],
+                "completed": after[t][1] - before.get(t, (0,) * 3)[1],
+                "slo_missed": after[t][2] - before.get(t, (0,) * 3)[2]}
+            for t in after}
+        configs_by_tenant = {
+            h.name.split("[", 1)[1].rstrip("]"): {
+                str(k): {kk: repr(vv) for kk, vv in (cfg_ or {}).items()}
+                for k, cfg_ in ctl.best_configs().items()}
+            for h, ctl in group.pairs}
+        stats = engine.stats()
+        row = {
+            "kind": kind,
+            "warmup_wall_s": round(warm_wall, 3),
+            "warmup_passes": warm_tries,
+            "wall_s": round(wall, 3),
+            "settled": group.settled(),
+            "tenants": per_tenant,
+            "configs": configs_by_tenant,
+            "tenant_steps": dict(stats.get("tenant_steps", {})),
+            "compile": rt.compile_stats(),
+        }
+        if "scheduler" in stats:
+            row["scheduler"] = stats["scheduler"]
+        engine.shutdown()
+        return row
+
+    try:
+        solo = run_once("solo")
+        drr = run_once("drr")
+        fcfs = run_once("fcfs")
+    finally:
+        shutil.rmtree(cache_root, ignore_errors=True)
+
+    solo_good = solo["tenants"].get("tight", {}).get("goodput_tokens", 0)
+    drr_good = drr["tenants"].get("tight", {}).get("goodput_tokens", 0)
+    fcfs_good = fcfs["tenants"].get("tight", {}).get("goodput_tokens", 0)
+    tight_cfgs = {json.dumps(c, sort_keys=True)
+                  for c in drr["configs"].get("tight", {}).values()}
+    loose_cfgs = {json.dumps(c, sort_keys=True)
+                  for c in drr["configs"].get("loose", {}).values()}
+    distinct = (drr["settled"] and bool(tight_cfgs) and bool(loose_cfgs)
+                and tight_cfgs.isdisjoint(loose_cfgs))
+    return {
+        "tight": {"arch": tight_arch, "n": n_tight,
+                  "prompt": tight_prompt, "budget": tight_budget,
+                  "weight": tight_weight},
+        "loose": {"arch": loose_arch, "n": n_loose,
+                  "prompt": loose_prompt, "budget": loose_budget,
+                  "weight": loose_weight},
+        "batch": batch,
+        "prefill_chunk": chunk,
+        "calibration_ms": {
+            **{f"{who}_{p}": round(c * 1e3, 3)
+               for who, by_phase in costs.items()
+               for p, c in by_phase.items()},
+            "engine_overhead": round(overhead * 1e3, 3)},
+        "predicted_ms": {"solo": round(m_tight * 1e3, 3),
+                         "drr": round(drr_pred * 1e3, 3),
+                         "fcfs": round(fcfs_pred * 1e3, 3)},
+        "deadline_ms": round(deadline * 1e3, 3),
+        "solo": solo,
+        "drr": drr,
+        "fcfs": fcfs,
+        "tight_goodput_tokens": {"solo": solo_good, "drr": drr_good,
+                                 "fcfs": fcfs_good},
+        "drr_x_solo": (round(drr_good / solo_good, 3)
+                       if solo_good else None),
+        "fcfs_x_solo": (round(fcfs_good / solo_good, 3)
+                        if solo_good else None),
+        "distinct_tenant_configs": distinct,
+        "drr_isolation": (solo_good > 0
+                          and drr_good >= 0.8 * solo_good
+                          and fcfs_good < 0.8 * solo_good),
+    }
+
+
 def _safety_builder(state):
     """Bench handler whose per-mode cost is a host-side sleep.
 
@@ -1381,6 +1703,7 @@ def run() -> list[Row]:
     result["open_loop"] = run_open_loop()
     result["disagg"] = run_disagg()
     result["fleet"] = run_fleet()
+    result["tenants"] = run_tenants()
     result["safety"] = run_safety()
     write_json(os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json"), result)
     d = result["dispatch_overhead_us"]
@@ -1388,6 +1711,7 @@ def run() -> list[Row]:
     ol = result["open_loop"]
     dg = result["disagg"]
     fl = result["fleet"]
+    tn = result["tenants"]
     sf = result["safety"]
     return [
         Row("serve/tok_per_s", result["tok_per_s"],
@@ -1423,6 +1747,11 @@ def run() -> list[Row]:
             f"router={fl['router']}"),
         Row("serve/fleet_warm_recompiles", float(fl["warm_recompiles"]),
             f"settle_speedup={fl['time_to_settled_speedup_x']}x"),
+        Row("serve/tenants_drr_x_solo", tn["drr_x_solo"] or 0.0,
+            f"fcfs={tn['fcfs_x_solo']} "
+            f"distinct_configs={tn['distinct_tenant_configs']}"),
+        Row("serve/tenants_drr_isolation", float(tn["drr_isolation"]),
+            f"tight_tokens={tn['tight_goodput_tokens']}"),
         Row("serve/safety_goodput_x_baseline",
             sf["goodput_safe_x_baseline"] or 0.0,
             f"unsafe={sf['goodput_unsafe_x_baseline']} "
@@ -1435,7 +1764,7 @@ def run() -> list[Row]:
 
 
 _SCENARIOS = ("all", "serve", "mixed", "open_loop", "disagg", "fleet",
-              "safety")
+              "tenants", "safety")
 
 
 def main() -> None:
@@ -1490,6 +1819,8 @@ def main() -> None:
     if args.scenario in ("all", "fleet"):
         result["fleet"] = run_fleet(replicas=args.fleet_replicas,
                                     router=args.fleet_router)
+    if args.scenario in ("all", "tenants"):
+        result["tenants"] = run_tenants()
     if args.scenario in ("all", "safety"):
         result["safety"] = run_safety()
     write_json(args.out, result)

@@ -57,6 +57,7 @@ import argparse
 import json
 import os
 import random
+import sys
 import time
 from types import SimpleNamespace
 
@@ -68,13 +69,18 @@ KV_PAGE_SIZES = (8, 16, 64)
 
 def synthetic_workload(n: int, rate: float, seed: int = 0,
                        budgets=(4, 8, 16, 32),
-                       prompts=(16, 64, 128)) -> list[tuple[float, Request]]:
+                       prompts=(16, 64, 128), tenant: str | None = None,
+                       deadline_s: float | None = None
+                       ) -> list[tuple[float, Request]]:
     """Deterministic open-loop schedule: pseudo-Poisson arrivals at
-    ``rate`` req/s with mixed prompt/decode lengths."""
+    ``rate`` req/s with mixed prompt/decode lengths.  ``tenant`` and
+    ``deadline_s`` stamp every request (multi-tenant runs give each
+    tenant its own schedule off its own seed substream)."""
     rng = random.Random(seed)
     times = pseudo_poisson_times([(n / max(rate, 1e-9) * 4, rate)], seed=seed)
     return [(t, Request(prompt_tokens=rng.choice(prompts),
-                        max_new_tokens=rng.choice(budgets)))
+                        max_new_tokens=rng.choice(budgets),
+                        tenant=tenant, deadline_s=deadline_s))
             for t in times[:n]]
 
 
@@ -139,7 +145,7 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--shed-policy", default="reject",
                     choices=("reject", "shed-oldest"))
     ap.add_argument("--scheduler", default="fcfs",
-                    choices=("fcfs", "sjf", "deadline"))
+                    choices=("fcfs", "sjf", "deadline", "drr"))
     ap.add_argument("--bucket-dwell", type=int, default=25,
                     help="engine steps per bucket-scheme candidate")
     ap.add_argument("--kv-dwell", type=int, default=25,
@@ -287,6 +293,160 @@ def build_engine(args) -> SimpleNamespace:
         batcher=batcher, tuner=tuner, kv_tuner=kv_tuner, kv=kv,
         metrics=metrics, restored=restored, initial_scheme=initial_scheme,
         initial_plan=initial_plan, shadow=shadow)
+
+
+def build_tenant_engine(args, tenants) -> SimpleNamespace:
+    """Build one multi-tenant engine: N models, one runtime, one
+    CompileService, one variant cache.
+
+    Each :class:`~repro.serve.tenancy.TenantSpec` gets its own registered
+    handler ``serve_step[name]`` whose context key is ``(tenant, phase,
+    bucket)``, its own params/paged-KV/executor, and its own Controller —
+    aggregated behind a :class:`~repro.serve.tenancy.ControllerGroup` and
+    a :class:`~repro.serve.tenancy.MultiTenantExecutor`.  Scheduling
+    between tenants defaults to weighted-fair DRR (``--scheduler drr``)
+    using each tenant's declared weight.  The bucket/KV plan tuners and
+    the safety plane are single-model machinery and stay off here
+    (tenant engines run plain Controllers with a fixed bucket scheme).
+    """
+    import jax
+
+    from repro import configs
+    from repro.checkpoint import restore_spec_state
+    from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
+                            IridescentRuntime, VariantCache)
+    from repro.models import transformer as model
+    from repro.models.transformer import RunOptions
+    from repro.serve import (AdmissionQueue, ContinuousBatcher,
+                             ControllerGroup, DeficitRoundRobin,
+                             MultiTenantExecutor, PagedKV, PhasedExecutor,
+                             ServeEngine, ServeMetrics,
+                             make_scheduler, make_tenant_context_fn)
+    from repro.training import make_serve_builder, phase_context_fn
+
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    variant_cache = None
+    if args.cache_dir:
+        variant_cache = VariantCache(
+            os.path.join(args.cache_dir, "variants"),
+            portable=getattr(args, "portable_cache", False))
+    rt = IridescentRuntime(async_compile=True,
+                           max_compile_workers=args.compile_workers,
+                           variant_cache=variant_cache)
+
+    stacks = {}
+    for spec in tenants:
+        cfg = configs.get_reduced(spec.arch).replace(compute_dtype="float32")
+        handler = rt.register(
+            f"serve_step[{spec.name}]",
+            make_serve_builder(cfg, kernel_impl="xla"),
+            context_fn=make_tenant_context_fn(spec.name, phase_context_fn),
+            donate_argnums=1)
+        stacks[spec.name] = SimpleNamespace(spec=spec, cfg=cfg,
+                                            handler=handler)
+
+    # Restore before building controllers (same ordering contract as the
+    # single-model path): every tenant's settled (tenant, phase, bucket)
+    # contexts seed onto its handler, keyed losslessly by the tuple codec.
+    spec_state_path = (os.path.join(args.cache_dir, "spec_state.json")
+                       if args.cache_dir else None)
+    restored = bool(spec_state_path
+                    and restore_spec_state(spec_state_path, rt, wait=True))
+
+    pairs = []
+    executors = {}
+    for spec in tenants:
+        st = stacks[spec.name]
+        cfg = st.cfg
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        run_opts = RunOptions(decode_cache_dtype="float32")
+        kv = PagedKV(model.init_cache(cfg, 1, args.max_len, run_opts),
+                     model.cache_axes(cfg), max_len=args.max_len,
+                     capacity_tokens=args.batch * args.max_len,
+                     page_size=args.kv_page_size)
+        st.kv = kv
+        executors[spec.name] = PhasedExecutor(
+            st.handler, params, kv, prefill_chunk=args.prefill_chunk,
+            vocab_size=cfg.vocab_size)
+        space = st.handler.spec_space()
+        labels = ["cache_dtype", "rmsnorm_impl"] + (
+            ["chunk_len"] if cfg.mixer in ("rwkv6", "hymba") else [])
+        st.controller = Controller(
+            st.handler,
+            (lambda space=space, labels=labels:
+             ExhaustiveSweep.from_space(space, labels)),
+            dwell=args.dwell, change_detector=lambda: ChangeDetector(0.3),
+            wait_compiles=False, prefetch=args.prefetch, budget=args.budget)
+        pairs.append((st.handler, st.controller))
+
+    group = ControllerGroup(pairs)
+    tenant_slos = {t.name: t.slo_s for t in tenants if t.slo_s is not None}
+    if args.scheduler == "drr":
+        scheduler = DeficitRoundRobin({t.name: t.weight for t in tenants})
+    else:
+        scheduler = make_scheduler(args.scheduler)
+    slo_s = args.slo_ms / 1e3
+    metrics = ServeMetrics(slo_s=slo_s, tenant_slos=tenant_slos)
+    first = stacks[tenants[0].name]
+    engine = ServeEngine(
+        first.handler, group,
+        ContinuousBatcher(args.batch), scheduler,
+        executor=MultiTenantExecutor(executors),
+        queue=AdmissionQueue(depth=args.queue_depth, policy=args.shed_policy),
+        metrics=metrics, slo_s=slo_s, tenant_slos=tenant_slos)
+    return SimpleNamespace(rt=rt, engine=engine, group=group,
+                           stacks=stacks, tenants=list(tenants),
+                           metrics=metrics, restored=restored)
+
+
+def _run_tenants(args) -> None:
+    """Multi-tenant single-process serving (``--tenant`` given)."""
+    from repro.serve import OpenLoopSource, parse_tenant_arg, substream_seed
+
+    tenants = [parse_tenant_arg(t, default_slo_ms=args.slo_ms)
+               for t in args.tenant]
+    built = build_tenant_engine(args, tenants)
+    rt, engine = built.rt, built.engine
+    if built.restored:
+        seeded = {name: list(st.handler._seeded)
+                  for name, st in built.stacks.items()}
+        print(f"restored spec state: seeded contexts={seeded}")
+    schedule: list = []
+    for spec in tenants:
+        schedule += synthetic_workload(
+            args.requests, args.rate, seed=substream_seed(args.seed,
+                                                          spec.name),
+            tenant=spec.name, deadline_s=spec.slo_s)
+    source = OpenLoopSource(engine.queue, schedule)
+
+    t0 = time.perf_counter()
+    engine.run(source=source, max_steps=args.steps)
+    engine.drain(timeout_s=60.0)
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    served = stats["serve"]
+    print(f"served {served['completed']} requests / "
+          f"{served['completed_tokens']} tokens in {wall:.2f}s across "
+          f"{len(tenants)} tenants "
+          f"(met={served['slo_met']} missed={served['slo_missed']})")
+    for name, sub in (served.get("tenants") or {}).items():
+        print(f"tenant {name}: completed={sub['completed']} "
+              f"goodput_tokens={sub['goodput_tokens']} "
+              f"slo_ms={(sub['slo_s'] or 0) * 1e3:.0f} "
+              f"met={sub['slo_met']} missed={sub['slo_missed']} "
+              f"p95_ms={sub['latency_p95_ms']}")
+    print(f"tenant steps: {stats.get('tenant_steps')}  "
+          f"scheduler: {json.dumps(stats.get('scheduler', {}))}")
+    for name, st in built.stacks.items():
+        cfgs = {str(k): ({kk: repr(vv) for kk, vv in cfg.items()}
+                         if cfg is not None else None)
+                for k, cfg in st.controller.best_configs().items()}
+        print(f"tenant {name} per-context configs: {json.dumps(cfgs)}")
+    print(f"compile stats: {json.dumps(rt.compile_stats())}")
+    _export_trace(args)
+    engine.shutdown(state_dir=args.cache_dir)
 
 
 def _status_provider(built, rt, args):
@@ -495,6 +655,12 @@ def _run_fleet(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     add_engine_args(ap)
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME=ARCH[:SLO_MS[:WEIGHT]]",
+                    help="repeatable: serve several models as tenants of "
+                         "one engine (own SLO class and DRR fair-share "
+                         "weight per tenant); implies single-process mode "
+                         "and defaults --scheduler to drr")
     ap.add_argument("--replicas", type=int, default=1,
                     help="N > 1 turns this process into a router front "
                          "over N subprocess engine replicas")
@@ -519,7 +685,13 @@ def main() -> None:
     args = ap.parse_args()
     if args.trace_out or args.telemetry_snapshot:
         telemetry.enable()
-    if args.replicas > 1:
+    if args.tenant:
+        if args.replicas > 1:
+            ap.error("--tenant is single-process; drop --replicas")
+        if "--scheduler" not in sys.argv and args.scheduler == "fcfs":
+            args.scheduler = "drr"    # tenants default to weighted-fair
+        _run_tenants(args)
+    elif args.replicas > 1:
         _run_fleet(args)
     else:
         _run_single(args)

@@ -22,9 +22,9 @@ and ``benchmarks/serve_bench.py`` for the open-loop evaluation scenario.
 from repro.serve.request import Completion, Request, next_request_id
 from repro.serve.queue import (AdmissionQueue, OpenLoopSource,
                                pseudo_poisson_times, substream_seed)
-from repro.serve.scheduler import (SCHEDULERS, DeadlineAware, FCFS,
-                                   Scheduler, ShortestJobFirst,
-                                   make_scheduler)
+from repro.serve.scheduler import (SCHEDULERS, DeadlineAware,
+                                   DeficitRoundRobin, FCFS, Scheduler,
+                                   ShortestJobFirst, make_scheduler)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.batcher import (BucketTuner, ContinuousBatcher, PackedBatch,
                                  bucket_plan_builder, default_schemes)
@@ -34,17 +34,22 @@ from repro.serve.executor import (DecodeExecutor, PhasedExecutor,
                                   PrefillExecutor)
 from repro.serve.engine import BatchExecutor, ServeEngine
 from repro.serve.shadow import ShadowEvaluator
+from repro.serve.tenancy import (ControllerGroup, MultiTenantExecutor,
+                                 TenantSpec, make_tenant_context_fn,
+                                 parse_tenant_arg)
 
 __all__ = [
     "Completion", "Request", "next_request_id",
     "AdmissionQueue", "OpenLoopSource", "pseudo_poisson_times",
     "substream_seed",
-    "SCHEDULERS", "DeadlineAware", "FCFS", "Scheduler", "ShortestJobFirst",
-    "make_scheduler", "ServeMetrics",
+    "SCHEDULERS", "DeadlineAware", "DeficitRoundRobin", "FCFS", "Scheduler",
+    "ShortestJobFirst", "make_scheduler", "ServeMetrics",
     "BucketTuner", "ContinuousBatcher", "PackedBatch",
     "bucket_plan_builder", "default_schemes",
     "KVTuner", "PagedKV", "PageError", "PagePool", "PageTable",
     "kv_plan_builder",
     "DecodeExecutor", "PhasedExecutor", "PrefillExecutor",
     "BatchExecutor", "ServeEngine", "ShadowEvaluator",
+    "ControllerGroup", "MultiTenantExecutor", "TenantSpec",
+    "make_tenant_context_fn", "parse_tenant_arg",
 ]

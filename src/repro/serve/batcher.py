@@ -79,6 +79,7 @@ class PackedBatch:
     scheme: str                      # bucketing scheme that sized it
     phase: str = "decode"            # "prefill" | "decode"
     in_flight: "list[Request] | None" = None   # all live rows (phased)
+    tenant: "str | None" = None      # tenant this step serves (multi-tenant)
 
     @property
     def pad(self) -> int:
@@ -125,7 +126,9 @@ class ContinuousBatcher:
                              f"have {sorted(self.schemes)}")
         self._fixed_scheme = self.default_scheme
         self._tuner: "BucketTuner | None" = None
-        self._prefill_turn = True    # phased packing: alternation state
+        #: phased packing alternation state, keyed by tenant (None for
+        #: the single-tenant legacy path)
+        self._prefill_turns: dict = {}
 
     # -- scheme selection ------------------------------------------------------
     def set_scheme(self, name: str) -> None:
@@ -169,8 +172,24 @@ class ContinuousBatcher:
         step runs is the first element of the handler's ``(phase,
         bucket)`` context key, so each phase dispatches through its own
         specialization contexts.
+
+        When requests carry **tenants**, each step serves exactly one
+        tenant (tenants run different models — their rows cannot share a
+        handler call).  The tenant is chosen by the scheduler's
+        ``pick(runnable)`` hook when it has one (DRR's weighted-fair
+        rotation) and otherwise by whichever tenant owns the globally
+        best-ranked request under the scheduler's ordinary key — FCFS
+        across tenants, starvation and all.  ``in_flight`` always holds
+        *every* live row across tenants; ``batch.tenant`` names the
+        served one.  Tenant-free traffic takes the exact legacy path.
         """
         rows = list(active)
+        tenant_keys = {r.tenant for r in rows}
+        if hasattr(queue, "waiting_tenants"):
+            tenant_keys |= queue.waiting_tenants()
+        if tenant_keys - {None}:
+            return self._pack_tenants(rows, tenant_keys, queue, scheduler,
+                                      now, slo_s, phased)
         capacity = self.max_batch - len(rows)
         joined: list[Request] = []
         if capacity > 0 and len(queue):
@@ -183,19 +202,86 @@ class ContinuousBatcher:
             size = self.bucket(len(rows), scheme) if rows else 0
             return PackedBatch(requests=rows, size=size, joined=joined,
                                scheme=scheme)
+        phase, selected, _ = self._split_phase(rows, None)
+        size = self.bucket(len(selected), scheme) if selected else 0
+        return PackedBatch(requests=selected, size=size, joined=joined,
+                           scheme=scheme, phase=phase, in_flight=rows)
+
+    def _split_phase(self, rows: list[Request],
+                     tenant: "str | None") -> tuple[str, list[Request], bool]:
+        """Partition one tenant's rows into the phase this step runs,
+        alternating per tenant (each tenant's prefill/decode interleave is
+        independent — a flood of prefills from one tenant must not eat
+        another's decode turns)."""
         pre = [r for r in rows if r.prefilling]
         dec = [r for r in rows if not r.prefilling]
-        if pre and (self._prefill_turn or not dec):
+        turn = self._prefill_turns.get(tenant, True)
+        if pre and (turn or not dec):
             phase, selected = "prefill", pre
         else:
             phase, selected = "decode", dec
         if pre and dec:
-            self._prefill_turn = not self._prefill_turn
+            self._prefill_turns[tenant] = not turn
         else:
-            self._prefill_turn = True    # next arrival starts with prefill
+            self._prefill_turns[tenant] = True  # next arrival: prefill first
+        return phase, selected, turn
+
+    def _pack_tenants(self, rows: list[Request], tenant_keys: set,
+                      queue: AdmissionQueue, scheduler: Scheduler,
+                      now: float, slo_s: "float | None",
+                      phased: bool) -> PackedBatch:
+        """Multi-tenant pack: pick the served tenant, join only its
+        waiters, bucket only its rows.  Other tenants' in-flight rows ride
+        along in ``in_flight`` so the engine's active set stays whole."""
+        groups: dict = {t: [r for r in rows if r.tenant == t]
+                        for t in tenant_keys}
+        waiting = queue.waiting_tenants() \
+            if hasattr(queue, "waiting_tenants") else set()
+        runnable = [t for t in sorted(tenant_keys,
+                                      key=lambda t: (t is None, str(t)))
+                    if groups.get(t) or t in waiting]
+        scheme = self.current_scheme()
+        if not runnable:
+            return PackedBatch(requests=[], size=0, joined=[], scheme=scheme,
+                               in_flight=rows)
+        keyfn = scheduler.key(now, slo_s)
+        pick = getattr(scheduler, "pick", None)
+        if pick is not None:
+            serving = pick(runnable)
+        else:
+            # No tenant-service protocol: serve the tenant owning the
+            # globally best-ranked request (peeking waiters too, so an
+            # all-queued tenant can still win a slot).
+            def best(t):
+                cand = list(groups.get(t, ()))
+                cand.extend(queue.peek_tenant(t)
+                            if hasattr(queue, "peek_tenant") else ())
+                return min((keyfn(r) for r in cand), default=None)
+
+            ranked = [(best(t), str(t)) for t in runnable]
+            serving = runnable[min(range(len(runnable)),
+                                   key=lambda i: (ranked[i][0] is None,
+                                                  ranked[i]))]
+        srows = list(groups.get(serving, ()))
+        capacity = self.max_batch - len(srows)
+        joined: list[Request] = []
+        if capacity > 0:
+            joined = queue.take(capacity, key=keyfn,
+                                where=lambda r: r.tenant == serving)
+            for req in joined:
+                req.service_t = now
+            srows.extend(joined)
+        all_rows = rows + joined
+        if not phased:
+            size = self.bucket(len(srows), scheme) if srows else 0
+            return PackedBatch(requests=srows, size=size, joined=joined,
+                               scheme=scheme, in_flight=all_rows,
+                               tenant=serving)
+        phase, selected, _ = self._split_phase(srows, serving)
         size = self.bucket(len(selected), scheme) if selected else 0
         return PackedBatch(requests=selected, size=size, joined=joined,
-                           scheme=scheme, phase=phase, in_flight=rows)
+                           scheme=scheme, phase=phase, in_flight=all_rows,
+                           tenant=serving)
 
 
 def bucket_plan_builder(schemes: Sequence[str],

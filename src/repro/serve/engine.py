@@ -90,6 +90,7 @@ class ServeEngine:
         kv_tuner=None,                       # repro.serve.kv.KVTuner
         metrics: ServeMetrics | None = None,
         slo_s: float | None = None,
+        tenant_slos: "dict[str, float] | None" = None,
         max_batch: int = 8,
         clock: Callable[[], float] = time.perf_counter,
         on_completion: Callable[[Completion], None] | None = None,
@@ -107,9 +108,13 @@ class ServeEngine:
         self.tuner = tuner
         self.kv_tuner = kv_tuner
         self.slo_s = slo_s
+        #: per-tenant default SLOs (a tenant's requests without their own
+        #: ``deadline_s`` fall back here before the engine-wide ``slo_s``)
+        self.tenant_slos = dict(tenant_slos or {})
         self.clock = clock
         self.metrics = metrics if metrics is not None \
-            else ServeMetrics(slo_s=slo_s, clock=clock)
+            else ServeMetrics(slo_s=slo_s, clock=clock,
+                              tenant_slos=self.tenant_slos)
         if callable(executor) and not hasattr(executor, "execute"):
             executor = _FnExecutor(executor)
         self.executor = executor
@@ -128,6 +133,7 @@ class ServeEngine:
         self.padded_rows = 0            # wasted rows (padding) across steps
         self.bucket_steps: dict[int, int] = {}
         self.phase_steps: dict[str, int] = {}
+        self.tenant_steps: dict[str, int] = {}
         self._draining = False
         self._last_depth = -1        # last queue depth put on the event bus
 
@@ -177,7 +183,17 @@ class ServeEngine:
                 _tb.emit("serve.queue_depth", "counter", depth=depth,
                          in_flight=len(batch.all_rows))
         self.active = list(batch.all_rows)
+        charge = getattr(self.scheduler, "charge", None)
+        prefill_before = sum(r.prompt_consumed for r in batch.requests) \
+            if charge is not None else 0
         produced = self.executor.execute(batch)
+        if produced is not None and len(produced) != len(batch.requests):
+            raise RuntimeError(
+                f"executor {type(self.executor).__name__} returned "
+                f"{len(produced)} per-request token counts for a batch of "
+                f"{len(batch.requests)} requests — execute() must align "
+                "its result with batch.requests (or return None for the "
+                "one-token-each contract)")
         t_after = self.clock()
         tokens = 0
         finished: list[Request] = []
@@ -190,6 +206,14 @@ class ServeEngine:
                 tokens += n
             if req.done:
                 finished.append(req)
+        if charge is not None and batch.tenant is not None:
+            # DRR accounting: the served tenant pays for what the step
+            # actually did — decode tokens produced plus prompt tokens
+            # prefilled (prefill is service too, just not output).
+            served = tokens + (sum(r.prompt_consumed
+                                   for r in batch.requests) - prefill_before)
+            if served > 0:
+                charge(batch.tenant, served)
         for req in finished:
             self._retire(req, t_after)
         self.steps += 1
@@ -199,6 +223,9 @@ class ServeEngine:
             self.bucket_steps.get(batch.size, 0) + 1
         self.phase_steps[batch.phase] = \
             self.phase_steps.get(batch.phase, 0) + 1
+        if batch.tenant is not None:
+            self.tenant_steps[batch.tenant] = \
+                self.tenant_steps.get(batch.tenant, 0) + 1
         if self.controller is not None:
             self.controller.step()
         if self.tuner is not None:
@@ -213,7 +240,9 @@ class ServeEngine:
         retire = getattr(self.executor, "retire", None)
         if retire is not None:
             retire(req)
-        completion = Completion.from_request(req, default_slo_s=self.slo_s)
+        default_slo = self.tenant_slos.get(req.tenant, self.slo_s) \
+            if req.tenant is not None else self.slo_s
+        completion = Completion.from_request(req, default_slo_s=default_slo)
         self.metrics.observe(completion)
         _tb = telemetry.bus()
         if _tb is not None:
@@ -278,15 +307,25 @@ class ServeEngine:
         while self.active or len(self.queue):
             if timeout_s is not None and self.clock() - t0 >= timeout_s:
                 if shed_on_timeout:
+                    shed_t = self.clock()
                     flushed = self.queue.flush()   # counted in queue stats
                     retire = getattr(self.executor, "retire", None)
                     for req in self.active:
                         req.shed = True
+                        if req.finish_t is None:
+                            # well-formed telemetry span: the request's
+                            # lifetime ends at the shed, not never
+                            req.finish_t = shed_t
                         if retire is not None:
                             retire(req)            # free slot/cache state
                     # metrics count only the in-flight sheds; the flushed
                     # waiters are already in queue.stats()["shed"].
-                    self.metrics.observe_shed(len(self.active))
+                    by_tenant: dict = {}
+                    for req in self.active:
+                        by_tenant[req.tenant] = \
+                            by_tenant.get(req.tenant, 0) + 1
+                    for t, n in by_tenant.items():
+                        self.metrics.observe_shed(n, tenant=t)
                     _tb = telemetry.bus()
                     if _tb is not None:
                         _tb.emit("serve.shed", track="serve",
@@ -297,6 +336,7 @@ class ServeEngine:
                     self.active.clear()
                 return False
             self.step()
+        self._draining = False           # fully drained: no longer mid-drain
         return True
 
     def shutdown(self, state_dir: str | None = None,
@@ -323,18 +363,30 @@ class ServeEngine:
             self.shadow.close()
         runtime.shutdown()
 
-    def _safety_state(self) -> dict | None:
-        """Per-handler safety payload for ``save_spec_state`` (v3): any
-        controller exposing ``safety_state()`` (the SafetyController)
-        contributes its last-known-good and quarantine maps."""
-        out = {}
-        pairs = [(self.handler.name, self.controller)]
+    def _controller_pairs(self) -> list:
+        """Every ``(handler_name, controller)`` this engine persists: the
+        model controller — or, multi-tenant, every tenant controller a
+        :class:`~repro.serve.tenancy.ControllerGroup` aggregates — plus
+        the bucket and KV plan tuners."""
+        pairs = []
+        sub = getattr(self.controller, "pairs", None)
+        if sub:
+            pairs.extend((h.name, c) for h, c in sub)
+        else:
+            pairs.append((self.handler.name, self.controller))
         if self.tuner is not None:
             pairs.append((self.tuner.handler.name, self.tuner.controller))
         if self.kv_tuner is not None:
             pairs.append((self.kv_tuner.handler.name,
                           self.kv_tuner.controller))
-        for name, ctl in pairs:
+        return pairs
+
+    def _safety_state(self) -> dict | None:
+        """Per-handler safety payload for ``save_spec_state`` (v3): any
+        controller exposing ``safety_state()`` (the SafetyController)
+        contributes its last-known-good and quarantine maps."""
+        out = {}
+        for name, ctl in self._controller_pairs():
             fn = getattr(ctl, "safety_state", None)
             if callable(fn):
                 state = fn()
@@ -347,13 +399,7 @@ class ServeEngine:
         controller is still exploring; everything else persists."""
         from repro.core.runtime import encode_context_key
         unsettled: dict[str, set] = {}
-        pairs = [(self.handler.name, self.controller)]
-        if self.tuner is not None:
-            pairs.append((self.tuner.handler.name, self.tuner.controller))
-        if self.kv_tuner is not None:
-            pairs.append((self.kv_tuner.handler.name,
-                          self.kv_tuner.controller))
-        for name, ctl in pairs:
+        for name, ctl in self._controller_pairs():
             if ctl is None:
                 continue
             drop = {encode_context_key(k) for k in ctl.contexts()
@@ -374,9 +420,15 @@ class ServeEngine:
             "in_flight": len(self.active),
             "bucket_steps": dict(sorted(self.bucket_steps.items())),
             "phase_steps": dict(sorted(self.phase_steps.items())),
+            "draining": self._draining,
             "queue": self.queue.stats(),
             "serve": self.metrics.summary(),
         }
+        if self.tenant_steps:
+            out["tenant_steps"] = dict(sorted(self.tenant_steps.items()))
+        sched_stats = getattr(self.scheduler, "stats", None)
+        if callable(sched_stats):
+            out["scheduler"] = sched_stats()
         if self.tuner is not None:
             out["buckets"] = self.tuner.status()
         if self.kv_tuner is not None:

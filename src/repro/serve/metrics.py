@@ -20,6 +20,7 @@ uniform sample over every completion ever observed, so a long-lived server
 """
 from __future__ import annotations
 
+import dataclasses
 import random
 import threading
 import time
@@ -84,12 +85,24 @@ class _Reservoir:
 
 
 class ServeMetrics:
-    """Completion accounting: percentiles, counters, goodput windows."""
+    """Completion accounting: percentiles, counters, goodput windows.
+
+    Completions carrying a ``tenant`` additionally feed a lazily created
+    per-tenant child ``ServeMetrics`` (same window), so multi-tenant
+    engines get per-tenant goodput/percentile breakdowns from
+    :meth:`summary` and tenant-resolved fleet aggregation through
+    :meth:`state`/:meth:`merge` without any extra wiring.  ``tenant_slos``
+    labels each child with its own SLO for reporting (``within_slo`` is
+    decided upstream, per request, by the engine).
+    """
 
     def __init__(self, slo_s: float | None = None, window: int = 2048,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tenant_slos: "Mapping[str, float] | None" = None):
         self.slo_s = slo_s
         self.window = int(window)
+        self.tenant_slos = dict(tenant_slos or {})
+        self._tenants: dict[str, "ServeMetrics"] = {}
         self._clock = clock
         self._lock = threading.Lock()
         self._latencies = _Reservoir(window, seed=0x5EED)
@@ -128,10 +141,31 @@ class ServeMetrics:
         self.throughput.add(completion.tokens)
         if completion.within_slo:
             self.goodput.add(completion.tokens)
+        tenant = getattr(completion, "tenant", None)
+        if tenant is not None:
+            self._tenant_child(tenant).observe(
+                dataclasses.replace(completion, tenant=None))
 
-    def observe_shed(self, n: int = 1) -> None:
+    def _tenant_child(self, tenant: str) -> "ServeMetrics":
+        with self._lock:
+            child = self._tenants.get(tenant)
+            if child is None:
+                child = ServeMetrics(
+                    slo_s=self.tenant_slos.get(tenant, self.slo_s),
+                    window=self.window, clock=self._clock)
+                self._tenants[tenant] = child
+        return child
+
+    def observe_shed(self, n: int = 1, tenant: str | None = None) -> None:
         with self._lock:
             self.shed += n
+        if tenant is not None:
+            self._tenant_child(tenant).observe_shed(n)
+
+    def tenants(self) -> dict[str, "ServeMetrics"]:
+        """Snapshot of the per-tenant children (shared references)."""
+        with self._lock:
+            return dict(self._tenants)
 
     # -- reading ---------------------------------------------------------------
     def percentile(self, p: float) -> float:
@@ -159,10 +193,15 @@ class ServeMetrics:
     def state(self) -> dict:
         """Portable snapshot: sample windows plus lifetime counters — the
         wire format a fleet replica ships to the router front so
-        :meth:`merge` can aggregate across processes."""
+        :meth:`merge` can aggregate across processes.
+
+        ``window`` travels on the wire so a merge of replicas running
+        bigger-than-default reservoirs is not silently subsampled back to
+        2048, and per-tenant children travel under ``tenants``."""
         with self._lock:
-            return {
+            out = {
                 "slo_s": self.slo_s,
+                "window": self.window,
                 "latencies": self._latencies.list(),
                 "latencies_seen": self._latencies.seen,
                 "queue_delays": self._queue_delays.list(),
@@ -171,6 +210,11 @@ class ServeMetrics:
                 "ttfts_seen": self._ttfts.seen,
                 **{f: getattr(self, f) for f in _COUNTERS},
             }
+            tenants = dict(self._tenants)
+        if tenants:
+            out["tenants"] = {t: child.state()
+                              for t, child in sorted(tenants.items())}
+        return out
 
     @classmethod
     def from_state(cls, state: Mapping, window: int | None = None,
@@ -180,10 +224,11 @@ class ServeMetrics:
         (rate counters restart — only samples and counters travel).  The
         rebuilt buffers stay bounded at ``window`` even when the snapshot
         carries more samples (a fleet merge): a uniform subsample is kept.
-        Snapshots without ``*_seen`` fields (older wire format) are
-        accepted — ``seen`` then defaults to the sample count."""
+        Snapshots without ``*_seen`` or ``window`` fields (older wire
+        formats) are accepted — ``seen`` then defaults to the sample
+        count and ``window`` to the 2048 default."""
         if window is None:
-            window = 2048
+            window = int(state.get("window", 2048))
         m = cls(slo_s=state.get("slo_s"), window=window, clock=clock)
         for field, res in (("latencies", m._latencies),
                            ("queue_delays", m._queue_delays),
@@ -191,6 +236,8 @@ class ServeMetrics:
             res.load(state.get(field, ()), seen=state.get(f"{field}_seen"))
         for f in _COUNTERS:
             setattr(m, f, int(state.get(f, 0)))
+        for t, sub in (state.get("tenants") or {}).items():
+            m._tenants[t] = cls.from_state(sub, clock=clock)
         return m
 
     @classmethod
@@ -200,12 +247,17 @@ class ServeMetrics:
         windows (not an average of per-replica percentiles, which has no
         rank semantics).  Accepts live :class:`ServeMetrics` instances or
         :meth:`state` snapshots interchangeably; ``slo_s`` survives only
-        when every input agrees on it."""
+        when every input agrees on it.  The merged reservoir ``window``
+        is the max across inputs (a replica that sampled at 8192 is not
+        squeezed back through a 2048 default), and per-tenant breakdowns
+        merge tenant-by-tenant."""
         states = [m.state() if isinstance(m, ServeMetrics) else dict(m)
                   for m in others]
         slos = {s.get("slo_s") for s in states}
         merged: dict = {
             "slo_s": slos.pop() if len(slos) == 1 else None,
+            "window": max((int(s.get("window", 2048)) for s in states),
+                          default=2048),
             "latencies": [], "queue_delays": [], "ttfts": [],
             **{f: 0 for f in _COUNTERS},
         }
@@ -217,6 +269,13 @@ class ServeMetrics:
                     + int(s.get(f"{samples}_seen", len(s.get(samples, ())))))
             for f in _COUNTERS:
                 merged[f] += int(s.get(f, 0))
+        by_tenant: dict[str, list] = {}
+        for s in states:
+            for t, sub in (s.get("tenants") or {}).items():
+                by_tenant.setdefault(t, []).append(sub)
+        if by_tenant:
+            merged["tenants"] = {t: cls.merge(*subs).state()
+                                 for t, subs in sorted(by_tenant.items())}
         return cls.from_state(merged)
 
     def summary(self) -> dict:
@@ -227,7 +286,9 @@ class ServeMetrics:
             tokens = self.completed_tokens
             good = self.goodput_tokens
             met, missed, shed = self.slo_met, self.slo_missed, self.shed
-        return {
+        with self._lock:
+            tenants = dict(self._tenants)
+        out = {
             "completed": completed,
             "completed_tokens": tokens,
             "goodput_tokens": good,
@@ -248,3 +309,7 @@ class ServeMetrics:
             "ttft_p95_ms": round(self.ttft_percentile(95) * 1e3, 3)
             if n_ttft else None,
         }
+        if tenants:
+            out["tenants"] = {t: child.summary()
+                              for t, child in sorted(tenants.items())}
+        return out

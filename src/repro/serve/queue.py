@@ -115,24 +115,45 @@ class AdmissionQueue:
 
     # -- engine side -----------------------------------------------------------
     def take(self, n: int,
-             key: Callable[[Request], object] | None = None) -> list[Request]:
+             key: Callable[[Request], object] | None = None,
+             where: Callable[[Request], bool] | None = None) -> list[Request]:
         """Pop up to ``n`` waiting requests, smallest ``key`` first
-        (``None`` = FIFO).  The remainder keeps its *arrival* order — the
-        shed-oldest policy's head-drop must keep meaning "longest
-        waiting", not "whatever the last scheduler sort left in front"."""
+        (``None`` = FIFO).  ``where`` restricts eligibility (the
+        multi-tenant batcher serves one tenant per step and must leave
+        other tenants' requests queued).  The remainder keeps its
+        *arrival* order — the shed-oldest policy's head-drop must keep
+        meaning "longest waiting", not "whatever the last scheduler sort
+        left in front"."""
         if n <= 0:
             return []
         with self._lock:
             if not self._waiting:
                 return []
+            pool = self._waiting if where is None \
+                else [r for r in self._waiting if where(r)]
+            if not pool:
+                return []
             if key is None:
-                return [self._waiting.popleft()
-                        for _ in range(min(n, len(self._waiting)))]
-            out = sorted(self._waiting, key=key)[:n]
+                out = list(pool)[:n]
+            else:
+                out = sorted(pool, key=key)[:n]
             chosen = {id(r) for r in out}
             self._waiting = collections.deque(
                 r for r in self._waiting if id(r) not in chosen)
             return out
+
+    def waiting_tenants(self) -> set:
+        """Distinct ``tenant`` values across waiting requests (a snapshot:
+        what the multi-tenant batcher treats as runnable backlog)."""
+        with self._lock:
+            return {r.tenant for r in self._waiting}
+
+    def peek_tenant(self, tenant) -> list[Request]:
+        """Snapshot of one tenant's waiting requests (not removed) — lets
+        a scheduler without the tenant-service protocol rank an all-queued
+        tenant against tenants with rows in flight."""
+        with self._lock:
+            return [r for r in self._waiting if r.tenant == tenant]
 
     def flush(self) -> list[Request]:
         """Drop every waiting request (drain timeout); returns them."""
@@ -170,14 +191,20 @@ def pseudo_poisson_times(phases: Sequence[tuple[float, float]],
     within a phase are seeded exponential draws at that phase's rate, so
     replaying the same seed gives every engine configuration the *same*
     arrival process (open-loop comparisons stay apples-to-apples).
+
+    Each phase restarts the exponential clock at its own boundary: the
+    Poisson process is memoryless, so the overshoot drawn at the previous
+    phase's rate is discarded rather than carried across (carrying it
+    biases every phase's first interarrival toward the *old* rate — a
+    slow->fast ramp would chronically under-deliver the burst's head).
     """
     rng = random.Random(seed)
     out: list[float] = []
-    t = phase_start = 0.0
+    phase_start = 0.0
     for duration, rate in phases:
         phase_end = phase_start + duration
         if rate > 0:
-            t = max(t, phase_start)
+            t = phase_start
             while True:
                 t += rng.expovariate(rate)
                 if t >= phase_end:

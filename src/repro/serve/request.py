@@ -40,6 +40,7 @@ class Request:
     prompt_tokens: int = 1
     max_new_tokens: int = 16
     deadline_s: float | None = None
+    tenant: str | None = None        # SLO class / model this request targets
     payload: Any = None              # opaque per-request state (e.g. tokens)
 
     arrival_t: float | None = None   # stamped by AdmissionQueue.submit
@@ -88,7 +89,8 @@ class Request:
         return base + slo if slo is not None else float("inf")
 
     def __repr__(self) -> str:
-        return (f"Request(rid={self.rid}, prompt={self.prompt_tokens}, "
+        who = f", tenant={self.tenant!r}" if self.tenant is not None else ""
+        return (f"Request(rid={self.rid}{who}, prompt={self.prompt_tokens}, "
                 f"budget={self.max_new_tokens}, generated={self.generated})")
 
 
@@ -104,10 +106,22 @@ class Completion:
     first_token_t: float | None
     finish_t: float
     within_slo: bool
+    tenant: str | None = None
 
     @classmethod
     def from_request(cls, req: Request,
                      default_slo_s: float | None = None) -> "Completion":
+        if req.arrival_t is None:
+            raise ValueError(
+                f"request rid={req.rid} has no arrival_t — it bypassed the "
+                "admission queue (AdmissionQueue.submit stamps arrival); "
+                "submit it through the queue or stamp arrival_t before "
+                "retiring it")
+        if req.finish_t is None:
+            raise ValueError(
+                f"request rid={req.rid} has no finish_t — it was never "
+                "retired; Completion.from_request is only meaningful for "
+                "finished (or shed-with-finish-stamp) requests")
         latency = req.finish_t - req.arrival_t
         slo = (req.deadline_s if req.deadline_s is not None
                else default_slo_s)
@@ -115,7 +129,8 @@ class Completion:
                    tokens=req.generated, arrival_t=req.arrival_t,
                    service_t=req.service_t,
                    first_token_t=req.first_token_t, finish_t=req.finish_t,
-                   within_slo=(slo is None or latency <= slo))
+                   within_slo=(slo is None or latency <= slo),
+                   tenant=req.tenant)
 
     @property
     def latency_s(self) -> float:

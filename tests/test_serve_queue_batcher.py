@@ -123,6 +123,26 @@ def test_pseudo_poisson_deterministic_and_phased():
     assert hi > 2 * lo                                # the ramp ramps
 
 
+def test_pseudo_poisson_phase_rates_unbiased_at_boundaries():
+    # Regression: the sampler used to carry a slow phase's overshoot
+    # arrival into the next phase, so a fast phase following a slow one
+    # started with an exponential gap drawn at the *slow* rate — shaving
+    # a chunk off every fast phase's arrival count.  Each phase must
+    # restart memorylessly at its own rate: per-phase counts then track
+    # rate * duration, for fast phases preceded by slow ones too.
+    phases = [(1.0, 2.0), (1.0, 40.0)] * 50   # slow on even s, fast on odd
+    ts = pseudo_poisson_times(phases, seed=11)
+    assert ts == sorted(ts) and ts[-1] < 100.0
+    slow = sum(1 for t in ts if int(t) % 2 == 0)
+    fast = sum(1 for t in ts if int(t) % 2 == 1)
+    assert slow == pytest.approx(100, rel=0.35)    # nominal 2 * 50
+    assert fast == pytest.approx(2000, rel=0.08)   # nominal 40 * 50
+    # every fast phase gets arrivals — the carried-gap bug left phases
+    # after a slow stretch starting empty for ~E[slow gap] seconds
+    for k in range(1, 100, 2):
+        assert any(k <= t < k + 1 for t in ts), f"fast phase {k} empty"
+
+
 def test_substream_seed_deterministic_per_replica():
     # Same (root, replica) -> same seed; every replica gets a distinct
     # substream, so fleet schedules never replay each other's bursts.

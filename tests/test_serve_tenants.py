@@ -1,0 +1,499 @@
+"""Multi-tenant serving: DRR weighted-fair isolation, tenant-keyed
+specialization contexts, per-tenant metrics breakdowns, executor routing,
+engine contract hardening, and tenant-keyed warm restarts."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import restore_spec_state
+from repro.core import (ChangeDetector, Controller, ExhaustiveSweep,
+                        IridescentRuntime)
+from repro.serve import (AdmissionQueue, Completion, ContinuousBatcher,
+                         ControllerGroup, DeficitRoundRobin, FCFS,
+                         MultiTenantExecutor, Request, ServeEngine,
+                         ServeMetrics, TenantSpec, make_scheduler,
+                         make_tenant_context_fn, parse_tenant_arg)
+
+D = 8
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+# -- DRR scheduler -------------------------------------------------------------
+
+def test_drr_service_ratio_tracks_unequal_weights():
+    drr = DeficitRoundRobin({"a": 3.0, "b": 1.0}, quantum=16)
+    picks = {"a": 0, "b": 0}
+    for _ in range(800):
+        t = drr.pick(["a", "b"])          # both always runnable
+        picks[t] += 1
+        drr.charge(t, 64)                 # equal-cost steps
+    assert picks["a"] == pytest.approx(3 * picks["b"], rel=0.05)
+    st = drr.stats()
+    assert st["weights"] == {"a": 3.0, "b": 1.0}
+    assert st["picks"]["a"] == picks["a"]
+
+
+def test_drr_deficit_bookkeeping_replenish_charge_and_caps():
+    drr = DeficitRoundRobin({"a": 2.0}, quantum=10, burst_rounds=4)
+    assert drr.pick(["a"]) == "a"
+    assert drr.deficit["a"] == pytest.approx(20.0)    # quantum * weight
+    drr.charge("a", 5)
+    assert drr.deficit["a"] == pytest.approx(15.0)
+    # positive credit is capped at burst_rounds quanta...
+    for _ in range(20):
+        drr.pick(["a"])
+    assert drr.deficit["a"] == pytest.approx(4 * 10 * 2.0)
+    # ...and debt is floored at the negative cap.
+    drr.charge("a", 10_000)
+    assert drr.deficit["a"] == pytest.approx(-4 * 10 * 2.0)
+
+
+def test_drr_idle_tenant_banks_nothing():
+    drr = DeficitRoundRobin(quantum=10)
+    for _ in range(10):
+        drr.pick(["a"])                   # b idle the whole time
+    drr.charge("a", 35)
+    assert drr.pick(["a", "b"]) != "b" or drr.deficit["b"] == \
+        pytest.approx(10.0)
+    # b's first pick round starts from zero credit, not ten banked rounds
+    assert drr.deficit["b"] <= 10.0
+
+
+def test_drr_validation_and_roster():
+    with pytest.raises(ValueError):
+        DeficitRoundRobin(quantum=0)
+    with pytest.raises(ValueError):
+        DeficitRoundRobin({"a": -1.0})
+    with pytest.raises(ValueError):
+        DeficitRoundRobin().pick([])
+    drr = make_scheduler("drr", weights={"a": 2.0})
+    assert isinstance(drr, DeficitRoundRobin)
+    assert drr.weight("a") == 2.0 and drr.weight("unknown") == 1.0
+
+
+# -- tenant declarations -------------------------------------------------------
+
+def test_parse_tenant_arg_grammar():
+    full = parse_tenant_arg("chat=qwen3-0.6b:50:3")
+    assert full == TenantSpec("chat", "qwen3-0.6b", slo_s=0.05, weight=3.0)
+    assert parse_tenant_arg("bg=rwkv6-1.6b").slo_s is None
+    assert parse_tenant_arg("bg=rwkv6-1.6b::2").weight == 2.0
+    inherited = parse_tenant_arg("bg=rwkv6-1.6b", default_slo_ms=200.0)
+    assert inherited.slo_s == pytest.approx(0.2)
+    for bad in ("nameonly", "=arch", "x=", "x=a:1:2:3"):
+        with pytest.raises(ValueError):
+            parse_tenant_arg(bad)
+    with pytest.raises(ValueError):
+        TenantSpec("t", "arch", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("t", "arch", slo_s=-1.0)
+
+
+def test_make_tenant_context_fn_prefixes_keys():
+    fn = make_tenant_context_fn("t", lambda a, k: ("decode", 4))
+    assert fn((), {}) == ("t", "decode", 4)
+    scalar = make_tenant_context_fn("t", lambda a, k: 8)
+    assert scalar((), {}) == ("t", 8)
+    bare = make_tenant_context_fn("t", None)
+    assert bare((), {}) == ("t",)
+
+
+# -- queue tenant filters ------------------------------------------------------
+
+def test_take_where_filters_and_preserves_other_tenants():
+    q = AdmissionQueue()
+    reqs = [Request(tenant="a" if i % 2 else "b") for i in range(6)]
+    for r in reqs:
+        q.submit(r)
+    assert q.waiting_tenants() == {"a", "b"}
+    got = q.take(10, where=lambda r: r.tenant == "a")
+    assert [r.tenant for r in got] == ["a", "a", "a"]
+    assert len(q) == 3                        # b's requests untouched
+    assert [r.tenant for r in q.peek_tenant("b")] == ["b", "b", "b"]
+    assert len(q) == 3                        # peek does not remove
+    assert q.waiting_tenants() == {"b"}
+
+
+# -- batcher: one tenant per step ---------------------------------------------
+
+def test_pack_serves_single_tenant_and_keeps_all_rows_in_flight():
+    q = AdmissionQueue()
+    for i in range(4):
+        q.submit(Request(tenant="a" if i % 2 else "b", max_new_tokens=2))
+    b = ContinuousBatcher(4, scheme="single")
+    drr = DeficitRoundRobin()
+    batch = b.pack([], q, drr, now=0.0)
+    assert batch.tenant is not None
+    assert {r.tenant for r in batch.requests} == {batch.tenant}
+    # the other tenant's requests stay queued, not silently dropped
+    assert q.waiting_tenants() == ({"a", "b"} - {batch.tenant})
+    drr.charge(batch.tenant, 64)               # the engine charges each step
+    active = list(batch.all_rows)
+    second = b.pack(active, q, drr, now=0.1)
+    assert second.tenant != batch.tenant       # DRR rotates to the debtor
+    assert {r.rid for r in second.in_flight} >= {r.rid for r in active}
+
+
+def test_pack_without_pick_serves_globally_best_ranked_tenant():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    first = Request(tenant="late-name-early-arrival", max_new_tokens=2)
+    q.submit(first)
+    clock.advance(1.0)
+    q.submit(Request(tenant="a", max_new_tokens=2))
+    b = ContinuousBatcher(4, scheme="single")
+    batch = b.pack([], q, FCFS(), now=clock())
+    assert batch.tenant == "late-name-early-arrival"   # FCFS: arrival wins
+    assert batch.requests == [first]
+
+
+def test_tenant_free_traffic_takes_legacy_path():
+    q = AdmissionQueue()
+    q.submit(Request(max_new_tokens=2))
+    b = ContinuousBatcher(4, scheme="pow2")
+    batch = b.pack([], q, FCFS(), now=0.0)
+    assert batch.tenant is None and batch.in_flight is None
+    assert batch.size == 1
+
+
+# -- per-tenant metrics --------------------------------------------------------
+
+def _completion(tenant, latency, tokens=4, within=True):
+    return Completion(rid=0, prompt_tokens=1, tokens=tokens, arrival_t=0.0,
+                      service_t=0.0, first_token_t=latency, finish_t=latency,
+                      within_slo=within, tenant=tenant)
+
+
+def test_per_tenant_breakdown_survives_state_merge_roundtrip():
+    m = ServeMetrics(slo_s=1.0, tenant_slos={"a": 0.1, "b": 5.0})
+    for latency in (0.01, 0.02, 0.03):
+        m.observe(_completion("a", latency))
+    m.observe(_completion("b", 2.0, tokens=10))
+    m.observe(_completion("b", 4.0, tokens=10, within=False))
+    s = m.summary()
+    assert s["tenants"]["a"]["completed"] == 3
+    assert s["tenants"]["a"]["slo_s"] == 0.1
+    assert s["tenants"]["b"]["goodput_tokens"] == 10
+    # state -> merge keeps tenant resolution and per-tenant percentiles
+    merged = ServeMetrics.merge(m.state(), m.state())
+    ta = merged.tenants()["a"]
+    assert ta.completed == 6 and ta.percentile(50) == pytest.approx(0.02)
+    tb = merged.tenants()["b"]
+    assert tb.goodput_tokens == 20 and tb.slo_missed == 2
+    # the parent's totals still cover everything
+    assert merged.completed == 10
+    assert merged.summary()["tenants"]["b"]["completed"] == 4
+
+
+def test_metrics_window_travels_on_the_wire():
+    big = ServeMetrics(slo_s=1.0, window=8192)
+    small = ServeMetrics(slo_s=1.0, window=512)
+    for m in (big, small):
+        m.observe(_completion(None, 0.5))
+    assert big.state()["window"] == 8192
+    assert ServeMetrics.from_state(big.state()).window == 8192
+    # merge keeps the biggest reservoir of the inputs
+    assert ServeMetrics.merge(big, small).window == 8192
+    assert ServeMetrics.merge(small.state(), big.state()).window == 8192
+    # old snapshots (no window field) still load, with the old default
+    legacy = {k: v for k, v in small.state().items() if k != "window"}
+    assert ServeMetrics.from_state(legacy).window == 2048
+    # explicit window argument still wins (caller override)
+    assert ServeMetrics.from_state(big.state(), window=64).window == 64
+
+
+def test_observe_shed_attributes_to_tenant():
+    m = ServeMetrics()
+    m.observe_shed(2, tenant="a")
+    m.observe_shed(1)
+    assert m.shed == 3
+    assert m.tenants()["a"].shed == 2
+
+
+# -- engine contract hardening -------------------------------------------------
+
+def _toy_builder(spec):
+    scale = spec.enum("scale", 1, (1, 2), guarded=False)
+
+    def f(x, w):
+        return (x @ w) * float(scale)
+
+    return f
+
+
+def _batch_ctx(args, kwargs):
+    return int(args[0].shape[0])
+
+
+class ToyExecutor:
+    def __init__(self, handler, produced=None):
+        self.handler = handler
+        self.w = jnp.eye(D, dtype=jnp.float32)
+        self.produced = produced
+        self.retired = []
+
+    def execute(self, batch):
+        x = jnp.ones((batch.size, D), jnp.float32)
+        jax.block_until_ready(self.handler(x, self.w))
+        if self.produced is not None:
+            return self.produced(batch)
+        return None
+
+    def retire(self, req):
+        self.retired.append(req.rid)
+
+
+def test_executor_length_mismatch_raises_named_error():
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("toy", _toy_builder, context_fn=_batch_ctx)
+    executor = ToyExecutor(handler, produced=lambda b: [1] * (len(b.requests)
+                                                             + 1))
+    engine = ServeEngine(handler, None, ContinuousBatcher(4, scheme="single"),
+                         FCFS(), executor=executor, queue=AdmissionQueue())
+    engine.submit(Request(max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="ToyExecutor.*1 request"):
+        engine.step()
+    rt.shutdown()
+
+
+def test_completion_from_request_descriptive_errors():
+    with pytest.raises(ValueError, match="bypassed the admission queue"):
+        Completion.from_request(Request())      # no arrival_t
+    half = Request()
+    half.arrival_t = 1.0
+    with pytest.raises(ValueError, match="never.*retired"):
+        Completion.from_request(half)           # no finish_t
+
+
+def test_drain_timeout_stamps_finish_t_and_wires_draining_flag():
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("toy", _toy_builder, context_fn=_batch_ctx)
+    clock = FakeClock()
+    executor = ToyExecutor(handler)
+    engine = ServeEngine(handler, None, ContinuousBatcher(2, scheme="single"),
+                         FCFS(), executor=executor,
+                         queue=AdmissionQueue(clock=clock), clock=clock)
+    assert engine.stats()["draining"] is False
+    long_ = Request(max_new_tokens=10 ** 6)
+    engine.submit(long_)
+    engine.step()
+    assert not engine.drain(timeout_s=0.0)      # immediate timeout: shed
+    assert engine.stats()["draining"] is True   # timed out mid-drain
+    assert long_.shed and long_.finish_t is not None
+    assert long_.finish_t >= long_.arrival_t    # well-formed telemetry span
+    assert executor.retired == [long_.rid]
+    rt.shutdown()
+
+
+def test_drain_completes_clears_draining_flag():
+    rt = IridescentRuntime(async_compile=False)
+    handler = rt.register("toy", _toy_builder, context_fn=_batch_ctx)
+    engine = ServeEngine(handler, None, ContinuousBatcher(2, scheme="single"),
+                         FCFS(), executor=ToyExecutor(handler),
+                         queue=AdmissionQueue())
+    engine.submit(Request(max_new_tokens=2))
+    assert engine.drain(timeout_s=10.0)
+    assert engine.stats()["draining"] is False
+    rt.shutdown()
+
+
+# -- multi-tenant engine -------------------------------------------------------
+
+def _tenant_engine(scheduler, rt, tag=""):
+    """Two toy tenants behind one engine: 'a' sparse, 'b' greedy."""
+    ha = rt.register(f"toy[a]{tag}", _toy_builder,
+                     context_fn=make_tenant_context_fn("a", _batch_ctx))
+    hb = rt.register(f"toy[b]{tag}", _toy_builder,
+                     context_fn=make_tenant_context_fn("b", _batch_ctx))
+    executor = MultiTenantExecutor({"a": ToyExecutor(ha),
+                                    "b": ToyExecutor(hb)})
+    engine = ServeEngine(ha, None, ContinuousBatcher(2, scheme="single"),
+                         scheduler, executor=executor, queue=AdmissionQueue())
+    return engine, ha, hb
+
+
+def _steps_until_tenant_a_done(engine, n_greedy=20):
+    for _ in range(n_greedy):
+        engine.submit(Request(tenant="b", max_new_tokens=4))
+    a_reqs = [Request(tenant="a", max_new_tokens=2) for _ in range(2)]
+    for r in a_reqs:
+        engine.submit(r)
+    steps = 0
+    while not all(r.done for r in a_reqs):
+        engine.step()
+        steps += 1
+        assert steps < 500
+    return steps
+
+
+def test_drr_isolates_sparse_tenant_from_greedy_flood():
+    rt = IridescentRuntime(async_compile=False)
+    drr_engine, *_ = _tenant_engine(DeficitRoundRobin(), rt)
+    drr_steps = _steps_until_tenant_a_done(drr_engine)
+    fcfs_engine, *_ = _tenant_engine(FCFS(), rt, tag="/fcfs")
+    fcfs_steps = _steps_until_tenant_a_done(fcfs_engine)
+    # FCFS serves the flood's backlog first; DRR alternates fairly.
+    assert drr_steps < fcfs_steps
+    assert fcfs_steps > 2 * drr_steps
+    stats = drr_engine.stats()
+    assert set(stats["tenant_steps"]) == {"a", "b"}
+    assert stats["scheduler"]["picks"]["b"] > 0
+    rt.shutdown()
+
+
+def test_tenant_contexts_are_disjoint_per_tenant():
+    rt = IridescentRuntime(async_compile=False)
+    engine, ha, hb = _tenant_engine(DeficitRoundRobin(), rt)
+    for tenant in ("a", "b"):
+        engine.submit(Request(tenant=tenant, max_new_tokens=2))
+    engine.run()
+    assert ("a", 2) in ha.contexts() and ("b", 2) in hb.contexts()
+    served = engine.metrics.summary()["tenants"]
+    assert served["a"]["completed"] == 1 and served["b"]["completed"] == 1
+    rt.shutdown()
+
+
+def test_tenant_slo_default_applied_at_retire():
+    rt = IridescentRuntime(async_compile=False)
+    clock = FakeClock()
+    ha = rt.register("toy[a]", _toy_builder,
+                     context_fn=make_tenant_context_fn("a", _batch_ctx))
+    executor = MultiTenantExecutor({"a": ToyExecutor(ha)})
+    got = []
+    engine = ServeEngine(ha, None, ContinuousBatcher(2, scheme="single"),
+                         DeficitRoundRobin(), executor=executor,
+                         queue=AdmissionQueue(clock=clock), clock=clock,
+                         slo_s=100.0, tenant_slos={"a": 0.5},
+                         on_completion=got.append)
+    engine.submit(Request(tenant="a", max_new_tokens=1))
+    clock.advance(1.0)                          # over the tenant SLO
+    engine.step()
+    (comp,) = got
+    assert comp.tenant == "a"
+    assert not comp.within_slo                  # 1.0s > tenant's 0.5s SLO
+    rt.shutdown()
+
+
+def test_multitenant_executor_routing_and_validation():
+    rt = IridescentRuntime(async_compile=False)
+    ha = rt.register("toy[a]", _toy_builder, context_fn=_batch_ctx)
+    with pytest.raises(ValueError):
+        MultiTenantExecutor({})
+    ex = MultiTenantExecutor({"a": ToyExecutor(ha)})
+    from repro.serve import PackedBatch
+    with pytest.raises(KeyError, match="no executor for tenant"):
+        ex.execute(PackedBatch(requests=[Request(tenant="z")], size=1,
+                               joined=[], scheme="single", tenant="z"))
+
+    class Phased(ToyExecutor):
+        phased = True
+
+    with pytest.raises(ValueError, match="agree on phased"):
+        MultiTenantExecutor({"a": ToyExecutor(ha), "b": Phased(ha)})
+    rt.shutdown()
+
+
+def test_controller_group_aggregates_and_validates():
+    rt = IridescentRuntime(async_compile=False)
+    ha = rt.register("toy[a]", _toy_builder,
+                     context_fn=make_tenant_context_fn("a", _batch_ctx))
+    hb = rt.register("toy[b]", _toy_builder,
+                     context_fn=make_tenant_context_fn("b", _batch_ctx))
+    sweep = lambda: ExhaustiveSweep([{"scale": 2}, {"scale": 1}])
+    ca = Controller(ha, sweep, dwell=2, wait_compiles=True, prefetch=0,
+                    change_detector=lambda: ChangeDetector(float("inf")))
+    cb = Controller(hb, sweep, dwell=2, wait_compiles=True, prefetch=0,
+                    change_detector=lambda: ChangeDetector(float("inf")))
+    group = ControllerGroup([(ha, ca), (hb, cb)])
+    assert group.controllers == {"toy[a]": ca, "toy[b]": cb}
+    with pytest.raises(ValueError):
+        ControllerGroup([])
+    with pytest.raises(ValueError):
+        ControllerGroup([(ha, ca), (ha, cb)])
+    w = jnp.eye(D, dtype=jnp.float32)
+    x = jnp.ones((2, D), jnp.float32)
+    for _ in range(12):
+        ha(x, w), hb(x, w)
+        group.step()
+    assert group.settled()
+    assert set(group.best_configs()) == {"toy[a]", "toy[b]"}
+    assert ("a", 2) in group.contexts() and ("b", 2) in group.contexts()
+    rt.shutdown()
+
+
+# -- warm restart with tenant-keyed contexts -----------------------------------
+
+def _tenant_restart_stack(tmp_path, restore=False):
+    cache_dir = str(tmp_path / "state")
+    rt = IridescentRuntime(async_compile=False,
+                           variant_cache=os.path.join(cache_dir, "variants"))
+    ha = rt.register("toy[a]", _toy_builder,
+                     context_fn=make_tenant_context_fn("a", _batch_ctx))
+    hb = rt.register("toy[b]", _toy_builder,
+                     context_fn=make_tenant_context_fn("b", _batch_ctx))
+    restored = False
+    if restore:
+        restored = restore_spec_state(
+            os.path.join(cache_dir, "spec_state.json"), rt, wait=True)
+    sweep = lambda: ExhaustiveSweep([{"scale": 2}, {"scale": 1}])
+    mk = lambda h: Controller(
+        h, sweep, dwell=3, wait_compiles=True, prefetch=0,
+        change_detector=lambda: ChangeDetector(float("inf")))
+    group = ControllerGroup([(ha, mk(ha)), (hb, mk(hb))])
+    executor = MultiTenantExecutor({"a": ToyExecutor(ha),
+                                    "b": ToyExecutor(hb)})
+    engine = ServeEngine(ha, group, ContinuousBatcher(2, scheme="single"),
+                         DeficitRoundRobin(), executor=executor,
+                         queue=AdmissionQueue())
+    return cache_dir, rt, ha, hb, group, engine, restored
+
+
+def _serve_both_tenants(engine, rounds=60):
+    for _ in range(rounds):
+        for tenant in ("a", "b"):
+            while sum(1 for r in engine.active if r.tenant == tenant) + \
+                    len(engine.queue.peek_tenant(tenant)) < 2:
+                engine.submit(Request(tenant=tenant, max_new_tokens=2))
+        engine.step()
+
+
+def test_tenant_contexts_restore_from_spec_state_with_zero_recompiles(
+        tmp_path):
+    (cache_dir, rt, ha, hb, group, engine,
+     _) = _tenant_restart_stack(tmp_path)
+    _serve_both_tenants(engine)
+    assert group.settled()
+    tuned = {name: {k: dict(cfg) for k, cfg in ctl.best_configs().items()}
+             for name, ctl in group.controllers.items()}
+    assert tuned["toy[a]"][("a", 2)] and tuned["toy[b]"][("b", 2)]
+    assert rt.compile_stats()["xla_compiles"] > 0
+    engine.shutdown(state_dir=cache_dir)
+    assert os.path.exists(os.path.join(cache_dir, "spec_state.json"))
+
+    # -- warm restart: every tenant context seeds, nothing recompiles ------
+    (cache_dir, rt2, ha2, hb2, group2, engine2,
+     restored) = _tenant_restart_stack(tmp_path, restore=True)
+    assert restored
+    assert ha2._seeded and hb2._seeded     # both tenants' contexts seeded
+    _serve_both_tenants(engine2, rounds=20)
+    warm = rt2.compile_stats()
+    assert warm["xla_compiles"] == 0          # all variants from the cache
+    assert warm["cache_hits"] > 0
+    for name, ctl in group2.controllers.items():
+        key = ("a", 2) if name == "toy[a]" else ("b", 2)
+        assert ctl.settled(context=key)
+        assert dict(ctl.best_configs()[key]) == tuned[name][key]
+    rt2.shutdown()
